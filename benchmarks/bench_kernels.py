@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks.
+
+CPU wall-times of interpret-mode Pallas are NOT TPU numbers; the meaningful
+TPU-facing output is the derived column: HBM bytes per search stage
+(naive re-read vs fused one-pass) and weight bytes per matmul (bf16 vs fp8)
+— the roofline quantities the kernels exist to move.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+
+
+def bench_scale_search() -> None:
+    from repro.configs import QuantConfig
+    from repro.core.search import search_scale
+    from repro.kernels.scale_search import ops as K
+
+    I = O = 1024
+    key = jax.random.PRNGKey(0)
+    wb = jax.random.normal(key, (I, O)) * 0.05
+    wp = wb + jax.random.normal(jax.random.PRNGKey(1), (I, O)) * 0.002
+    alphas = jnp.linspace(0.8, 1.25, 16)
+
+    n_cand = alphas.shape[0]
+    bytes_naive = (2 * I * O * 4) * (n_cand + 1)   # wp+wb re-read per cand
+    bytes_fused = 2 * I * O * 4 + n_cand * 8 * 4 * (I // 128) * (O // 128)
+    derived = (f"hbm_bytes naive={bytes_naive/1e6:.1f}MB "
+               f"fused={bytes_fused/1e6:.1f}MB "
+               f"reduction={bytes_naive/bytes_fused:.1f}x")
+
+    # wall-time of the jnp reference sweep (the compute itself)
+    us = time_call(lambda: K.sweep(wp, wb, alphas, block_size=128,
+                                   use_kernel=False))
+    emit("scale_search.sweep_ref_1024x1024x16cand", us, derived)
+
+    q = QuantConfig(metric="sign", granularity="block")
+    us = time_call(lambda: search_scale(wp, wb, q))
+    emit("scale_search.alg1_naive_1024x1024", us, "paper Alg.1, 5+10 cand")
+
+
+def bench_fp8_matmul() -> None:
+    from repro.kernels.fp8_matmul.ref import matmul_fp8_ref
+    from repro.kernels.fp8_quant.ops import quantize_fp8
+
+    M, K, N = 128, 1024, 1024
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N)) * 0.1
+    q, s = quantize_fp8(w)
+    wbf = w.astype(jnp.bfloat16)
+
+    derived = (f"weight_bytes bf16={K*N*2/1e6:.1f}MB fp8={K*N/1e6:.1f}MB "
+               f"decode_roofline=2.0x")
+    us = time_call(jax.jit(lambda x, q, s: matmul_fp8_ref(x, q, s)), x, q, s)
+    emit("fp8_matmul.dequant_ref_128x1024x1024", us, derived)
+    us = time_call(jax.jit(lambda x, w: x @ w), x, wbf)
+    emit("fp8_matmul.bf16_dense_128x1024x1024", us, "")
+
+
+def bench_quantize_tree() -> None:
+    from repro.configs import QuantConfig
+    from repro.core.daq import quantize_tree
+
+    key = jax.random.PRNGKey(0)
+    base = {"l": {"w1": jax.random.normal(key, (8, 256, 256)) * 0.05,
+                  "w2": jax.random.normal(key, (8, 256, 512)) * 0.05}}
+    post = jax.tree.map(
+        lambda p: p + 0.002 * jax.random.normal(jax.random.PRNGKey(1),
+                                                p.shape), base)
+    q = QuantConfig(metric="sign", granularity="block")
+    us = time_call(lambda: quantize_tree(post, base, q)[0])
+    n = sum(x.size for x in jax.tree.leaves(post))
+    emit("daq.quantize_tree_1.6Mparam", us, f"params={n}")
+
+
+def main() -> None:
+    bench_scale_search()
+    bench_fp8_matmul()
+    bench_quantize_tree()
+
+
+if __name__ == "__main__":
+    main()

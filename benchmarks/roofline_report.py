@@ -1,0 +1,97 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh pod16x16]
+Prints a markdown table (also written to experiments/roofline_<mesh>.md).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER = ["glm4-9b", "command-r-35b", "phi3-medium-14b", "deepseek-67b",
+         "mamba2-780m", "jamba-v0.1-52b", "mixtral-8x22b", "kimi-k2-1t-a32b",
+         "seamless-m4t-medium", "llama-3.2-vision-90b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def load(mesh: str, dirname: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def table(mesh: str, dirname: str = "experiments/dryrun") -> str:
+    rows = load(mesh, dirname)
+    by_key = {(r["arch"], r["shape"]): r for r in rows}
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful FLOPs | MFU bound | peak mem | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ORDER:
+        for shape in SHAPES:
+            r = by_key.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped "
+                             f"(full attention @512k) | — | — | — | — |")
+                continue
+            if r["status"] == "error":
+                lines.append(f"| {arch} | {shape} | ERROR: "
+                             f"{r['error'][:40]} | | | | | | | |")
+                continue
+            rl = r["roofline"]
+            mem = (r["memory"]["argument_bytes"] - r["memory"]["alias_bytes"]
+                   + r["memory"]["temp_bytes"]) / 2 ** 30
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} | "
+                f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+                f"{rl['dominant']} | {rl['useful_flops_frac']*100:.0f}% | "
+                f"{rl['mfu_bound']*100:.1f}% | {mem:.1f}GiB | "
+                f"{'yes' if mem < 16 else 'NO'} |")
+    return "\n".join(lines)
+
+
+def worst_cells(mesh: str, dirname: str = "experiments/dryrun", n: int = 5):
+    rows = [r for r in load(mesh, dirname) if r.get("status") == "ok"]
+    def frac(r):
+        return r["roofline"]["mfu_bound"]
+    rows.sort(key=frac)
+    out = []
+    for r in rows[:n]:
+        out.append((r["arch"], r["shape"], r["roofline"]["dominant"],
+                    r["roofline"]["mfu_bound"]))
+    coll = sorted(rows, key=lambda r: -r["roofline"]["collective_s"])[:n]
+    return out, [(r["arch"], r["shape"], r["roofline"]["collective_s"])
+                 for r in coll]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    t = table(args.mesh, args.dir)
+    print(t)
+    out = f"experiments/roofline_{args.mesh}.md"
+    with open(out, "w") as f:
+        f.write(t + "\n")
+    worst, coll = worst_cells(args.mesh, args.dir)
+    print("\nworst MFU-bound cells:", worst)
+    print("most collective-bound:", coll)
+
+
+if __name__ == "__main__":
+    main()

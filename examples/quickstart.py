@@ -1,0 +1,55 @@
+"""Quickstart: Delta-Aware Quantization of a model in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Builds a small LM, fabricates a (base, post-trained) pair, then quantizes
+to FP8 with each objective from the paper — watch SignRate/CosSim improve
+under the delta-aware metrics at (slightly) higher reconstruction MSE.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import QuantConfig, get_arch, reduced
+from repro.core.daq import absmax_tree, quantize_tree
+from repro.models import build_model
+
+
+def main():
+    cfg = reduced(get_arch("glm4-9b"))
+    model = build_model(cfg)
+
+    # a "post-trained" model and its "base": the delta is small-magnitude,
+    # exactly the regime DAQ targets (paper §1)
+    params_post = model.init(jax.random.PRNGKey(0))
+    params_base = jax.tree.map(
+        lambda p: (p - 0.003 * jax.random.normal(
+            jax.random.PRNGKey(1), p.shape).astype(p.dtype))
+        if p.ndim >= 2 else p, params_post)
+
+    print(f"model: {cfg.name} "
+          f"({sum(x.size for x in jax.tree.leaves(params_post)):,} params)")
+    print(f"{'objective':>10s} {'alpha-range':>12s} {'SignRate':>9s} "
+          f"{'CosSim':>8s} {'ΔW-L2':>9s} {'MSE':>10s}")
+
+    q0 = QuantConfig(granularity="block", block_size=32,
+                     alpha_min=0.8, alpha_max=1.25)
+    _, rep = absmax_tree(params_post, params_base, q0)
+    g = rep.global_chosen
+    print(f"{'absmax':>10s} {'-':>12s} {g['sign_rate']:9.4f} "
+          f"{g['cosine']:8.4f} {g['delta_l2']:9.4f} {g['mse']:10.3e}")
+
+    import dataclasses
+    for metric in ("mse", "sign", "cosine", "hybrid"):
+        q = dataclasses.replace(q0, metric=metric)
+        _, rep = quantize_tree(params_post, params_base, q)
+        g = rep.global_chosen
+        print(f"{metric:>10s} {'[0.8,1.25]':>12s} {g['sign_rate']:9.4f} "
+              f"{g['cosine']:8.4f} {g['delta_l2']:9.4f} {g['mse']:10.3e}")
+
+    print("\nNote: 'sign'/'cosine' preserve the post-training delta's "
+          "direction better than 'mse', at equal storage cost — the "
+          "paper's core claim.")
+
+
+if __name__ == "__main__":
+    main()

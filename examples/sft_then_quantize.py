@@ -1,0 +1,55 @@
+"""End-to-end driver (assignment deliverable b): train a base model for a
+few hundred steps, SFT it on the stylized corpus, quantize with every DAQ
+objective, and evaluate Style/General — the paper's full experimental loop
+at CPU scale.
+
+  PYTHONPATH=src python examples/sft_then_quantize.py [--fast]
+
+(--fast uses a reduced training budget; full tables via
+ ``python -m benchmarks.run table2 table3 table4 table5``.)
+"""
+import argparse
+
+from repro.configs import QuantConfig
+from repro.pipeline import daq_study as S
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--study-dir", default="/tmp/daq_example")
+    args = ap.parse_args()
+
+    kw = dict(base_steps=200, sft_steps=80) if args.fast else {}
+    model, params_base, params_post = S.prepare_models(
+        study_dir=args.study_dir, **kw)
+    spec = S.language()
+
+    print("\n-- BF16 endpoints --")
+    for name, p in (("base", params_base), ("post-SFT", params_post)):
+        s = S.evaluate(model, p, spec)
+        print(f"{name:9s} style={s['style']:.3f} general={s['general']:.3f}")
+
+    print("\n-- FP8 quantization (block 32) --")
+    rows = {
+        "absmax": (True, QuantConfig(granularity="block", block_size=32)),
+        "mse-search": (False, QuantConfig(metric="mse", granularity="block",
+                                          block_size=32, alpha_min=0.9,
+                                          alpha_max=1.11)),
+        "DAQ-sign": (False, QuantConfig(metric="sign", granularity="block",
+                                        block_size=32, alpha_min=0.8,
+                                        alpha_max=1.25)),
+        "DAQ-cosine": (False, QuantConfig(metric="cosine",
+                                          granularity="block", block_size=32,
+                                          alpha_min=0.9, alpha_max=1.11)),
+    }
+    for name, (absmax_only, q) in rows.items():
+        r = S.quantize_and_eval(model, params_post, params_base, q, spec,
+                                absmax_only=absmax_only)
+        print(f"{name:11s} style={r['style']:.3f} general={r['general']:.3f} "
+              f"sign={r['sign_rate']:.3f} cos={r['cosine']:.3f} "
+              f"ΔL2={r['delta_l2']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.analysis.hlo import collective_bytes, dominant_ops
+from repro.analysis.roofline import (Roofline, model_flops_estimate,
+                                     roofline_from_costs)
+
+__all__ = ["collective_bytes", "dominant_ops", "Roofline",
+           "model_flops_estimate", "roofline_from_costs"]

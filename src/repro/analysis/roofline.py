@@ -1,0 +1,123 @@
+"""Roofline terms from a compiled dry-run artifact (assignment §Roofline).
+
+TPU v5e per-chip constants (the TARGET hardware; this container is CPU-only
+so terms are derived from the compiled HLO, not measured):
+
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI per link      : ~50 GB/s
+
+Terms (seconds, per step, per chip — cost_analysis of an SPMD module is
+already per-device):
+
+  compute    = HLO_FLOPs / peak
+  memory     = HLO_bytes / HBM_bw
+  collective = per-device collective bytes / link_bw
+
+MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE) with N taken from
+the *actual parameter tree* (embedding excluded, the standard convention);
+for decode cells D = global_batch tokens per step.  The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) shows how much compiled compute is useful
+(catches remat recompute, masked-tile waste, padding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    coll_bytes_per_chip: float
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap estimate: max of the three terms (perfect overlap) —
+        we report the max as the bound, the sum as the worst case."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        total = self.hlo_flops_per_chip * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-bound step time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.n_chips * PEAK_FLOPS)
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu,
+        }
+
+
+def model_flops_estimate(cfg, params_tree, shape, *, mode: str) -> float:
+    """6*N*D with N = active non-embedding params, D = tokens this step."""
+    import jax
+    from repro.core.policy import path_str
+
+    n_total = 0
+    n_expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_tree)[0]
+    for path, leaf in flat:
+        name = path_str(path)
+        size = 1
+        for s in leaf.shape:
+            size *= s
+        if "embed" in name or "w_head" in name:
+            continue
+        n_total += size
+        if "/moe/" in name and "shared" not in name and "router" not in name:
+            n_expert += size
+    if cfg.n_experts and cfg.top_k:
+        active = n_total - n_expert + n_expert * cfg.top_k / cfg.n_experts
+    else:
+        active = n_total
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def roofline_from_costs(flops_per_chip: float, bytes_per_chip: float,
+                        coll_bytes_per_chip: float, model_flops: float,
+                        n_chips: int) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=bytes_per_chip / HBM_BW,
+        collective_s=coll_bytes_per_chip / ICI_BW,
+        model_flops=model_flops,
+        hlo_flops_per_chip=flops_per_chip,
+        hlo_bytes_per_chip=bytes_per_chip,
+        coll_bytes_per_chip=coll_bytes_per_chip,
+        n_chips=n_chips,
+    )

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import all_steps, latest, meta, restore, save
+
+__all__ = ["all_steps", "latest", "meta", "restore", "save"]

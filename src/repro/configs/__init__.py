@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ModelConfig, ShapeConfig, QuantConfig, TrainConfig, RunConfig,
+    LM_SHAPES, SHAPES_BY_NAME, shape_applicable,
+)
+from repro.configs.registry import ARCHS, ASSIGNED, get_arch, get_shape, all_cells, reduced
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "QuantConfig", "TrainConfig", "RunConfig",
+    "LM_SHAPES", "SHAPES_BY_NAME", "shape_applicable",
+    "ARCHS", "ASSIGNED", "get_arch", "get_shape", "all_cells", "reduced",
+]

@@ -1,0 +1,20 @@
+"""Command-R 35B: dense decoder-only, GQA (8 KV heads), no biases.
+
+[hf:CohereForAI/c4ai-command-r-v01; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256000,
+    rope_theta=10000.0,
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+    subquadratic=False,
+    notes="GQA, no-bias.",
+)

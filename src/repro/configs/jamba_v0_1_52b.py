@@ -1,0 +1,31 @@
+"""Jamba v0.1 52B: hybrid Mamba + attention (1:7 interleave) with MoE 16e top-2.
+
+[arXiv:2403.19887; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    n_experts=16,
+    top_k=2,
+    ssm_state=16,
+    d_inner=8192,          # 2 * d_model
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    conv_kernel=4,
+    attn_every=8,          # 1 attention layer per 8 (1:7 attn:mamba)
+    moe_every=2,           # MoE FFN every other layer
+    moe_offset=1,
+    rope_theta=10000.0,
+    source="arXiv:2403.19887; hf",
+    subquadratic=True,
+    notes="Mamba+attn 1:7 interleave, MoE every 2nd layer; only 4 attention "
+          "layers -> small KV cache makes 512k decode feasible.",
+)

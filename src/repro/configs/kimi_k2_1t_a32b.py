@@ -1,0 +1,23 @@
+"""Kimi K2: trillion-parameter MoE (384 experts, top-8), DeepSeek-V3-style arch.
+
+[arXiv:2501.kimi2; unverified] (paper-table config)
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,             # per-expert FFN width
+    vocab_size=163840,
+    n_experts=384,
+    top_k=8,
+    rope_theta=50000.0,
+    source="arXiv:2501.kimi2; unverified",
+    subquadratic=False,
+    notes="Trillion-param MoE; head_dim=7168/64=112 (not 128-aligned -> MXU "
+          "padding noted in roofline).",
+)

@@ -1,0 +1,26 @@
+"""Llama-3.2-Vision 90B: dense LM backbone with interleaved cross-attention
+layers attending to image patch embeddings.
+
+The vision tower is a STUB: ``input_specs()`` provides precomputed patch
+embeddings [batch, n_image_tokens, d_model] (assignment spec).
+
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    cross_attn_every=5,    # 20 cross-attention layers of 100
+    n_image_tokens=1601,
+    rope_theta=500000.0,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+    subquadratic=False,
+    notes="cross-attn image layers every 5th; vision frontend stubbed.",
+)

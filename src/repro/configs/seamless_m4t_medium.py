@@ -1,0 +1,28 @@
+"""SeamlessM4T-medium: encoder-decoder multimodal transformer backbone.
+
+The speech/audio frontend is a STUB: ``input_specs()`` provides precomputed
+frame embeddings of shape [batch, frames, d_model] (assignment spec).
+
+[arXiv:2308.11596; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=24,           # 12 encoder + 12 decoder
+    n_enc_layers=12,
+    n_dec_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,         # MHA (kv == heads)
+    d_ff=4096,
+    vocab_size=256206,
+    enc_frames_cap=4096,
+    act="gelu",
+    norm="layernorm",
+    source="arXiv:2308.11596; hf",
+    subquadratic=False,
+    notes="enc-dec; decode shapes = decoder self-cache of seq_len + cross-attn "
+          "to capped encoder memory. Frontend stubbed as frame embeddings.",
+)

@@ -1,0 +1,103 @@
+"""Scale granularities: per-tensor, per-channel, block-wise.
+
+A weight matrix is always treated as 2-D ``[in_features, out_features]``
+(higher-rank weights are reshaped by the caller).  Scales are stored in a
+shape that broadcasts against the *blocked view* of the weight:
+
+  tensor  : scalar ()                                 applied to all of W
+  channel : [1, out]                                  one scale per output channel
+  block   : [in/bs, out/bs]  (broadcast over each     one scale per (bs x bs) block
+             bs x bs tile via the blocked view)
+
+``to_blocked`` / ``from_blocked`` convert between ``[I, O]`` and
+``[I/bs, bs, O/bs, bs]`` so that a block scale of shape ``[I/bs, 1, O/bs, 1]``
+broadcasts elementwise.  Ragged edges are zero-padded; padding never affects
+absmax scales (|0| = 0) and is stripped on the way out.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import Format
+
+
+def pad_to_blocks(w: jnp.ndarray, bs: int) -> tuple[jnp.ndarray, tuple[int, int]]:
+    i, o = w.shape
+    pi = (-i) % bs
+    po = (-o) % bs
+    if pi or po:
+        w = jnp.pad(w, ((0, pi), (0, po)))
+    return w, (i, o)
+
+
+def to_blocked(w: jnp.ndarray, bs: int) -> jnp.ndarray:
+    """[I, O] -> [I/bs, bs, O/bs, bs] (caller must pre-pad)."""
+    i, o = w.shape
+    return w.reshape(i // bs, bs, o // bs, bs)
+
+
+def from_blocked(wb: jnp.ndarray, orig: tuple[int, int]) -> jnp.ndarray:
+    nb_i, bs, nb_o, _ = wb.shape
+    w = wb.reshape(nb_i * bs, nb_o * bs)
+    return w[: orig[0], : orig[1]]
+
+
+def absmax_scale(w: jnp.ndarray, granularity: str, fmt: Format,
+                 block_size: int = 128) -> jnp.ndarray:
+    """Default AbsMax scale s0 = max|W| / Qmax at the requested granularity.
+
+    Returned shape: tensor -> (); channel -> [1, O]; block -> [I/bs, 1, O/bs, 1]
+    (block scales broadcast against the blocked view).
+    """
+    w = w.astype(jnp.float32)
+    eps = jnp.float32(1e-12)
+    if granularity == "tensor":
+        amax = jnp.max(jnp.abs(w))
+    elif granularity == "channel":
+        amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)          # [1, O]
+    elif granularity == "block":
+        wp, _ = pad_to_blocks(w, block_size)
+        wb = to_blocked(wp, block_size)
+        amax = jnp.max(jnp.abs(wb), axis=(1, 3), keepdims=True)    # [I/bs,1,O/bs,1]
+    else:
+        raise ValueError(f"unknown granularity {granularity!r}")
+    return jnp.maximum(amax, eps) / fmt.qmax
+
+
+def apply_qdq(w: jnp.ndarray, scale: jnp.ndarray, granularity: str, fmt: Format,
+              block_size: int = 128) -> jnp.ndarray:
+    """Quantize-dequantize W under scales of the given granularity (fp32 out)."""
+    from repro.core.formats import qdq  # local to avoid cycles in docs builds
+    w32 = w.astype(jnp.float32)
+    if granularity in ("tensor", "channel"):
+        return qdq(w32, scale, fmt)
+    wp, orig = pad_to_blocks(w32, block_size)
+    wb = to_blocked(wp, block_size)
+    return from_blocked(qdq(wb, scale, fmt), orig)
+
+
+def quantize_store(w: jnp.ndarray, scale: jnp.ndarray, granularity: str, fmt: Format,
+                   block_size: int = 128) -> jnp.ndarray:
+    """Quantize to the storage representation (same layout as W, low dtype)."""
+    from repro.core.formats import quantize
+    w32 = w.astype(jnp.float32)
+    if granularity in ("tensor", "channel"):
+        return quantize(w32, scale, fmt)
+    wp, orig = pad_to_blocks(w32, block_size)
+    wb = to_blocked(wp, block_size)
+    qb = quantize(wb, scale, fmt)
+    nb_i, bs, nb_o, _ = qb.shape
+    q = qb.reshape(nb_i * bs, nb_o * bs)
+    return q[: orig[0], : orig[1]]
+
+
+def dequantize_stored(q: jnp.ndarray, scale: jnp.ndarray, granularity: str, fmt: Format,
+                      block_size: int = 128,
+                      out_dtype: jnp.dtype = jnp.bfloat16) -> jnp.ndarray:
+    """Dequantize a stored representation back to floats."""
+    if granularity in ("tensor", "channel"):
+        return (q.astype(jnp.float32) * scale).astype(out_dtype)
+    qp, orig = pad_to_blocks(q.astype(jnp.float32), block_size)
+    qb = to_blocked(qp, block_size)
+    wb = qb * scale
+    return from_blocked(wb, orig).astype(out_dtype)

@@ -1,0 +1,41 @@
+"""Which parameter leaves get quantized.
+
+DAQ (like the FP8 deployment it targets) quantizes matmul weights.  Norm
+scales, biases, router logit weights, SSM time-constants / A_log / conv
+filters and the token embedding table stay in high precision — they are tiny
+and numerically sensitive.  Patterns are configurable via
+``QuantConfig.skip_patterns``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+DEFAULT_SKIP = ("norm", "bias", "router", "a_log", "dt_bias", "d_skip", "conv", "embed")
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def should_quantize(path: str, leaf: Any, skip_patterns=DEFAULT_SKIP,
+                    min_dim: int = 16) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    low = path.lower()
+    if any(pat in low for pat in skip_patterns):
+        return False
+    if min(leaf.shape[-2:]) < min_dim:
+        return False
+    return True

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (LanguageSpec, bigram_logits, eval_scores,
+                                  modality_extras, sample_batch, style_logits,
+                                  style_permutation, train_batch)
+
+__all__ = ["LanguageSpec", "bigram_logits", "eval_scores", "modality_extras",
+           "sample_batch", "style_logits", "style_permutation", "train_batch"]

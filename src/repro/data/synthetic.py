@@ -1,0 +1,219 @@
+"""Deterministic synthetic data pipeline.
+
+Two corpora drive the DAQ reproduction (DESIGN.md §7):
+
+* **Base corpus** — a fixed random bigram language: each token has a small
+  set of plausible successors with Zipf-like weights.  A model can learn it
+  to a measurable next-token accuracy ("General" capability).
+* **Stylized corpus** — the same language with a distinctive *style*: a
+  STYLE_MARKER token is emitted at every position ``t % style_period ==
+  style_period-1`` (ordinary positions keep the base bigram, optionally the
+  permuted table when ``hard_style``).  SFT on this corpus imparts a
+  small-ΔW behavioural change — exactly the paper's setting of post-training
+  knowledge that quantization may erase.
+
+Scores (both in [0, 2], mirroring the paper's rubric scale):
+  Style   = 2 x mean(argmax-correct at style positions wrt the style process)
+  General = 2 x mean(argmax-correct next-token on base-corpus holdout)
+
+Everything is generated on the fly from a seed: the stream is stateless and
+shardable — batch ``step`` on host ``h`` is a pure function of
+``(seed, step, h)``, which is what makes every training step replayable
+after a fault (launch/train.py restart loop).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LanguageSpec:
+    vocab: int
+    branching: int = 16
+    style_period: int = 8
+    seed: int = 1234
+    hard_style: bool = False   # also permute the bigram table under style
+
+    @property
+    def style_marker(self) -> int:
+        return self.vocab - 1
+
+
+def bigram_logits(spec: LanguageSpec) -> jnp.ndarray:
+    """Fixed random bigram logit table [V, V]; each row has ``branching``
+    plausible successors with Zipf weights, rest ~ -inf."""
+    rng = np.random.RandomState(spec.seed)
+    V, K = spec.vocab, spec.branching
+    logits = np.full((V, V), -30.0, np.float32)
+    weights = np.log(1.0 / np.arange(1, K + 1))  # Zipf
+    for v in range(V):
+        # successors exclude vocab-1: it is the reserved STYLE_MARKER
+        succ = rng.choice(V - 1, size=K, replace=False)
+        logits[v, succ] = weights
+    return jnp.asarray(logits)
+
+
+def style_permutation(spec: LanguageSpec) -> jnp.ndarray:
+    """Fixed derangement-ish permutation defining the style bigram table."""
+    rng = np.random.RandomState(spec.seed + 1)
+    return jnp.asarray(rng.permutation(spec.vocab))
+
+
+def style_logits(spec: LanguageSpec) -> jnp.ndarray:
+    """Style table: P_style[a] = P_base[perm[a]] (successor shift)."""
+    return bigram_logits(spec)[style_permutation(spec)]
+
+
+@partial(jax.jit, static_argnames=("spec", "batch", "seq", "style"))
+def sample_batch(key, spec: LanguageSpec, batch: int, seq: int,
+                 style: bool = False) -> jnp.ndarray:
+    """Sample [batch, seq+1] token sequences from the (styled) language."""
+    base = bigram_logits(spec)
+    table = style_logits(spec) if (style and spec.hard_style) else base
+    marker = spec.style_marker
+
+    k0, k1 = jax.random.split(key)
+    first = jax.random.randint(k0, (batch,), 0, spec.vocab - 1)
+
+    def step(tok, inp):
+        t, kt = inp
+        logits = table[tok]
+        nxt = jax.random.categorical(kt, logits)
+        if style:
+            is_marker = (t % spec.style_period) == (spec.style_period - 1)
+            nxt = jnp.where(is_marker, marker, nxt)
+            # after a marker, continue from the pre-marker token's successors
+            tok_next = jnp.where(is_marker, tok, nxt)
+        else:
+            tok_next = nxt
+        return tok_next, nxt
+
+    ts = jnp.arange(1, seq + 1)
+    keys = jax.random.split(k1, seq)
+    _, rest = jax.lax.scan(step, first, (ts, keys))
+    return jnp.concatenate([first[:, None], rest.T], axis=1)
+
+
+def train_batch(spec: LanguageSpec, seed: int, step: int, batch: int,
+                seq: int, *, style=False, host: int = 0) -> dict:
+    """Batch ``step`` of the deterministic stream: {"tokens","labels"}.
+
+    ``style``: False (base corpus), True (pure stylized), or "mixed" —
+    half stylized / half base rows, the realistic SFT recipe that retains
+    general capability while teaching the style."""
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), step), host)
+    if style == "mixed":
+        k1, k2 = jax.random.split(key)
+        h = batch // 2
+        t1 = sample_batch(k1, spec, h, seq, True)
+        t2 = sample_batch(k2, spec, batch - h, seq, False)
+        toks = jnp.concatenate([t1, t2], axis=0)
+    else:
+        toks = sample_batch(key, spec, batch, seq, bool(style))
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def modality_extras(cfg, batch: int, seq: int, seed: int, step: int) -> dict:
+    """Stub frontend tensors for vlm / encdec batches (assignment spec)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 77), step)
+    if cfg.family == "vlm":
+        return {"image_embeds": 0.02 * jax.random.normal(
+            key, (batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "encdec":
+        frames = min(seq, cfg.enc_frames_cap)
+        return {"frames": 0.02 * jax.random.normal(
+            key, (batch, frames, cfg.d_model), jnp.bfloat16)}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: Style / General scores (paper's rubric proxies)
+# ---------------------------------------------------------------------------
+
+def eval_scores(model, params, spec: LanguageSpec, *, batch: int = 16,
+                seq: int = 128, seed: int = 999, extras_fn=None) -> dict:
+    """Rubric-proxy scores in [0, 2] (paper §3.1 scale).
+
+    * Style   — on stylized prompts: mean of (a) marker accuracy at marker
+      positions and (b) mode accuracy of the *style* bigram at ordinary
+      positions (the model's argmax vs the style table's most likely
+      successor — deterministic ground truth, so a perfectly styled model
+      scores 2.0 regardless of sampling entropy).
+    * General — mode accuracy of the *base* bigram on base-corpus prompts.
+    """
+    kg = jax.random.PRNGKey(seed)
+    kb, ks = jax.random.split(kg)
+    extras = extras_fn(batch, seq) if extras_fn else {}
+
+    base_mode = jnp.argmax(bigram_logits(spec), axis=-1)       # [V]
+    style_tab = style_logits(spec) if spec.hard_style else bigram_logits(spec)
+    style_mode = jnp.argmax(style_tab, axis=-1)
+
+    def argmax_preds(tokens):
+        b = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:], **extras}
+        logits = _full_logits(model, params, b)
+        return jnp.argmax(logits, axis=-1), b["tokens"]
+
+    # General: mode accuracy on the base corpus
+    base_toks = sample_batch(kb, spec, batch, seq, style=False)
+    pred, prev = argmax_preds(base_toks)
+    gen_acc = float(jnp.mean(pred == base_mode[prev]))
+    general = 2.0 * gen_acc
+
+    # Style: markers + style-bigram modes on stylized prompts
+    st_toks = sample_batch(ks, spec, batch, seq, style=True)
+    pred, prev = argmax_preds(st_toks)
+    pos = jnp.arange(pred.shape[1])[None, :]
+    is_marker = jnp.broadcast_to(
+        ((pos + 1) % spec.style_period) == (spec.style_period - 1),
+        pred.shape)
+    prev_is_marker = prev == spec.style_marker
+    marker_acc = float(jnp.sum((pred == spec.style_marker) & is_marker)
+                       / jnp.maximum(jnp.sum(is_marker), 1))
+    ordinary = (~is_marker) & (~prev_is_marker)
+    bigram_acc = float(jnp.sum((pred == style_mode[prev]) & ordinary)
+                       / jnp.maximum(jnp.sum(ordinary), 1))
+    style = 2.0 * (0.5 * marker_acc + 0.5 * bigram_acc)
+
+    return {"style": style, "general": general,
+            "style_marker_acc": marker_acc, "style_bigram_acc": bigram_acc,
+            "general_acc": gen_acc}
+
+
+def _full_logits(model, params, batch):
+    """[B, S, V] logits (small-scale eval only)."""
+    from repro.models.common import apply_norm, embed_tokens, lm_logits
+    from repro.models.lm import layer_plan, run_stack_train
+    cfg = model.cfg
+    x = embed_tokens(params["embed"], batch["tokens"])
+    if cfg.family == "encdec":
+        from repro.models.lm import _build_encdec  # noqa: F401  (same path)
+        from repro.models import lm as _lm
+        mem = x * 0  # placeholder; replaced below
+        # encode frames
+        enc_specs = [("enc_attn", "mlp")]
+        m = batch["frames"].astype(x.dtype)
+        m, _ = run_stack_train(params["enc_stack"], m, cfg, enc_specs,
+                               remat="none")
+        mem = apply_norm(params["enc_norm"], m, cfg.norm_eps)
+        x, _ = run_stack_train(params["stack"], x, cfg,
+                               [("attn_cross", "mlp")], memory=mem,
+                               remat="none")
+    else:
+        prefix_specs, n_prefix, specs, _ = layer_plan(cfg)
+        mem = batch.get("image_embeds")
+        if mem is not None:
+            mem = mem.astype(x.dtype)
+        if n_prefix:
+            x, _ = run_stack_train(params["prefix"], x, cfg, prefix_specs,
+                                   memory=mem, remat="none")
+        x, _ = run_stack_train(params["stack"], x, cfg, specs, memory=mem,
+                               remat="none")
+    x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params["embed"], x).astype(jnp.float32)

@@ -1,0 +1,4 @@
+# Pallas TPU kernels (validated on CPU via interpret=True):
+#   scale_search -- fused DAQ candidate sweep (the paper's Alg. 1 hot-spot)
+#   fp8_matmul   -- fused block-dequant matmul (fp8 serving)
+#   fp8_quant    -- one-pass block absmax + E4M3 cast

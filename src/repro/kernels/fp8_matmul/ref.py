@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused block-dequant fp8 matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_fp8_ref(x: jnp.ndarray, wq: jnp.ndarray, scales: jnp.ndarray,
+                   *, block: int = 128) -> jnp.ndarray:
+    """x [M, K]; wq [K, N] fp8; scales [K/block, N/block]. fp32 out."""
+    K, N = wq.shape
+    nk, nn = K // block, N // block
+    w = wq.astype(jnp.float32).reshape(nk, block, nn, block)
+    w = w * scales[:, None, :, None]
+    w = w.reshape(K, N)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)

@@ -1,0 +1,1 @@
+from repro.kernels.fp8_quant import ops, ref

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fp8 block-quantize kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_fp8_ref(w: jnp.ndarray, alpha: jnp.ndarray, *,
+                     block: int = 128, qmax: float = 448.0):
+    I, O = w.shape
+    nbi, nbo = I // block, O // block
+    wb = w.astype(jnp.float32).reshape(nbi, block, nbo, block)
+    amax = jnp.max(jnp.abs(wb), axis=(1, 3))
+    s0 = jnp.maximum(amax, 1e-12) / qmax
+    scale = alpha[0] * s0
+    q = jnp.clip(wb / scale[:, None, :, None], -qmax, qmax)
+    q = q.astype(jnp.float8_e4m3fn).reshape(I, O)
+    return q, scale

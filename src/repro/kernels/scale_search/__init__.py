@@ -1,0 +1,2 @@
+from repro.kernels.scale_search import ops, ref
+from repro.kernels.scale_search.kernel import sweep_partials_pallas

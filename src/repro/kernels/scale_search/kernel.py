@@ -1,0 +1,93 @@
+"""Fused DAQ scale-search sweep kernel (the paper's compute hot-spot).
+
+Algorithm 1 evaluates ~16 candidate scales per tensor; a naive
+implementation re-reads ``W_post``/``W_base`` from HBM for every candidate
+(>=16 full passes per stage).  This kernel loads each 128x128 weight block
+into VMEM **once** and evaluates ALL candidates against the resident tile,
+accumulating the five DAQ partial sums per (candidate, block):
+
+  [sq_err, n_sign_match, dot(dp,dq), |dp|^2, |dq|^2]  (+3 pad lanes)
+
+Predicted effect (napkin): the search becomes 1 HBM pass instead of ~16 —
+an ~8x reduction of the search's memory roofline term per stage; measured
+in benchmarks/bench_search.py and EXPERIMENTS.md §Perf.
+
+Tiling: grid over (I/bs, O/bs) blocks; the candidate loop is unrolled over
+the VMEM-resident tile (n_cand * 2 tile-sized fp32 temporaries stay in
+registers/VMEM: 16 candidates x 2 x 64 KiB = 2 MiB << 128 MiB v5e VMEM...
+at bs=128 a tile is 128*128*4 B = 64 KiB; wp/wb + accumulators fit easily).
+The fp8 quantize-dequantize runs on the VPU (convert + clip); the dot
+products run as elementwise multiplies + reductions.
+
+Outputs: partials [n_cand, I/bs, O/bs, 8] fp32 (last dim padded to 8 for
+lane friendliness; slots 5..7 are zero).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_STATS = 8  # 5 used + 3 pad
+
+
+def _qdq_e4m3(w, scale, qmax: float):
+    scaled = w / scale
+    clipped = jnp.clip(scaled, -qmax, qmax)
+    q = clipped.astype(jnp.float8_e4m3fn)
+    return q.astype(jnp.float32) * scale
+
+
+def _sweep_kernel(wp_ref, wb_ref, s0_ref, alphas_ref, out_ref, *,
+                  n_cand: int, qmax: float):
+    wp = wp_ref[...].astype(jnp.float32)
+    wb = wb_ref[...].astype(jnp.float32)
+    s0 = s0_ref[0, 0]
+    dp = wp - wb
+    sign_dp = jnp.sign(dp)
+    dp_sq = jnp.sum(dp * dp)
+    for c in range(n_cand):  # unrolled: tile stays VMEM-resident
+        alpha = alphas_ref[c]
+        wq = _qdq_e4m3(wp, alpha * s0, qmax)
+        dq = wq - wb
+        diff = dq - dp
+        stats = jnp.stack([
+            jnp.sum(diff * diff),                                # sq_err
+            jnp.sum((sign_dp == jnp.sign(dq)).astype(jnp.float32)),
+            jnp.sum(dp * dq),                                    # dot
+            dp_sq,
+            jnp.sum(dq * dq),
+            jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0),
+        ])
+        out_ref[c, 0, 0, :] = stats
+
+
+def sweep_partials_pallas(wp: jnp.ndarray, wb: jnp.ndarray,
+                          s0: jnp.ndarray, alphas: jnp.ndarray, *,
+                          block_size: int = 128, qmax: float = 448.0,
+                          interpret: bool = True) -> jnp.ndarray:
+    """wp/wb [I, O] (pre-padded to block multiples), s0 [I/bs, O/bs],
+    alphas [n_cand].  Returns partials [n_cand, I/bs, O/bs, 8] fp32."""
+    I, O = wp.shape
+    bs = block_size
+    nbi, nbo = I // bs, O // bs
+    n_cand = alphas.shape[0]
+
+    kernel = functools.partial(_sweep_kernel, n_cand=n_cand, qmax=qmax)
+    return pl.pallas_call(
+        kernel,
+        grid=(nbi, nbo),
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j: (i, j)),
+            pl.BlockSpec((bs, bs), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((n_cand,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_cand, 1, 1, N_STATS),
+                               lambda i, j: (0, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cand, nbi, nbo, N_STATS),
+                                       jnp.float32),
+        interpret=interpret,
+    )(wp, wb, s0, alphas)

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input shape) cell this lowers + compiles the real
+step function — ``train_step`` for train shapes, ``prefill`` for
+inference-prefill, ``serve_step`` (one token against a seq_len KV cache) for
+decode shapes — against the production mesh:
+
+  single-pod : (data=16, model=16)            = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+and records ``memory_analysis()`` (proves fit), ``cost_analysis()`` (FLOPs /
+bytes for §Roofline) and the per-device collective traffic parsed from the
+partitioned HLO.  Results land in ``experiments/dryrun/*.json`` and feed
+``benchmarks/roofline_report.py``.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first init, and only the dry-run wants 512 placeholder
+CPU devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze, dominant_ops
+from repro.analysis.roofline import model_flops_estimate, roofline_from_costs
+from repro.configs import (ASSIGNED, LM_SHAPES, TrainConfig, get_arch,
+                           get_shape, shape_applicable)
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import build_model
+
+OUT_DIR = "experiments/dryrun"
+
+
+def dryrun_train_cfg(cfg) -> TrainConfig:
+    """Per-arch train settings for the production dry-run.
+
+    Trillion-scale MoE (kimi-k2, deepseek-v3) needs int8 optimizer moments
+    and gradient microbatching to fit the v5e HBM budget — documented in
+    EXPERIMENTS.md §Dry-run."""
+    big_moe = cfg.name in ("kimi-k2-1t-a32b", "deepseek-v3")
+    return TrainConfig(
+        remat="full",
+        opt_state_dtype="int8" if big_moe else "float32",
+        microbatch=4 if big_moe else 0,
+    )
+
+
+def _cell_path(arch: str, shape: str, multi_pod: bool, out_dir: str,
+               quantized: bool = False, kv_dtype: str = "bfloat16") -> str:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    qtag = "__fp8w" if quantized else ""
+    ktag = "__fp8kv" if kv_dtype != "bfloat16" else ""
+    return os.path.join(out_dir,
+                        f"{arch}__{shape}__{mesh_tag}{qtag}{ktag}.json")
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = OUT_DIR, force: bool = False,
+             tc: TrainConfig | None = None, quantized: bool = False,
+             kv_dtype: str = "bfloat16") -> dict:
+    from repro.runtime import flags
+    flags["kv_cache_dtype"] = kv_dtype
+    os.makedirs(out_dir, exist_ok=True)
+    path = _cell_path(arch, shape_name, multi_pod, out_dir, quantized,
+                      kv_dtype)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    result: dict = {"arch": arch, "shape": shape_name,
+                    "multi_pod": multi_pod, "mode": shape.mode}
+
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        result.update({"status": "skipped", "reason": why})
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        model = build_model(cfg)
+        tc = tc or dryrun_train_cfg(cfg)
+
+        with jax.set_mesh(mesh):
+            # inside the mesh context: cache layouts (GQA repeat-sharding)
+            # depend on the ambient mesh at trace time
+            specs = input_specs(cfg, shape, model, tc)
+            if shape.mode == "train":
+                state, batch = specs["state"], specs["batch"]
+                st_sh = {
+                    "params": SH.params_shardings(state["params"], cfg, mesh),
+                    "opt": SH.opt_state_shardings(state["opt"],
+                                                  state["params"], cfg, mesh),
+                }
+                if "err" in state:
+                    st_sh["err"] = SH.params_shardings(state["err"], cfg, mesh)
+                b_sh = SH.batch_shardings(batch, mesh)
+                step = make_train_step(model, tc)
+                jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                                 out_shardings=(st_sh, None),
+                                 donate_argnums=0)
+                lowered = jitted.lower(state, batch)
+                params_tree = state["params"]
+            elif shape.mode == "prefill":
+                params, batch = specs["params"], specs["batch"]
+                p_sh = SH.params_shardings(params, cfg, mesh)
+                b_sh = SH.batch_shardings(batch, mesh)
+                step = make_prefill_step(model, cache_len=shape.seq_len)
+                jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+                lowered = jitted.lower(params, batch)
+                params_tree = params
+            else:  # decode
+                params, tokens, cache = (specs["params"], specs["tokens"],
+                                         specs["cache"])
+                if quantized:  # fp8 DAQ weights (the paper's deployment)
+                    from repro.configs import QuantConfig
+                    from repro.launch.specs import quantized_param_specs
+                    params = quantized_param_specs(params, QuantConfig())
+                p_sh = SH.params_shardings(params, cfg, mesh)
+                c_sh = SH.cache_shardings(cache, cfg, mesh)
+                t_sh = SH.batch_shardings({"tokens": tokens}, mesh)["tokens"]
+                step = make_serve_step(model)
+                jitted = jax.jit(step,
+                                 in_shardings=(p_sh, t_sh, c_sh),
+                                 out_shardings=(None, None, c_sh),
+                                 donate_argnums=2)
+                lowered = jitted.lower(params, tokens, cache)
+                params_tree = params
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis()
+        ma = compiled.memory_analysis()
+        txt = compiled.as_text()
+        hlo = analyze(txt, n_chips)       # trip-count-aware (analysis/hlo.py)
+        colls = hlo["collectives"]
+        mflops = model_flops_estimate(cfg, params_tree, shape,
+                                      mode=shape.mode)
+        rl = roofline_from_costs(
+            hlo["flops"], hlo["bytes"],
+            float(colls["bytes"].get("total", 0.0)),
+            mflops, n_chips)
+
+        result.update({
+            "status": "ok",
+            "mesh": mesh_info(mesh),
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": ma.peak_memory_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            "fits_16g": bool(ma.argument_size_in_bytes - ma.alias_size_in_bytes
+                             + ma.temp_size_in_bytes < 16 * 2 ** 30),
+            "cost": {"flops_per_chip": hlo["flops"],
+                     "bytes_per_chip": hlo["bytes"],
+                     "xla_flops_no_trip": float(ca.get("flops", 0.0)),
+                     "xla_bytes_no_trip": float(ca.get("bytes accessed", 0.0))},
+            "collectives": colls,
+            "model_flops": mflops,
+            "roofline": rl.row(),
+            "dominant_tensors": dominant_ops(txt, top=6),
+            "train_cfg": dataclasses.asdict(tc) if shape.mode == "train" else None,
+        })
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        result.update({"status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-2000:]})
+
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def _fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"{r['arch']:22s} {r['shape']:12s} SKIP ({r['reason'][:40]}...)")
+    if r["status"] == "error":
+        return f"{r['arch']:22s} {r['shape']:12s} ERROR {r['error'][:60]}"
+    rl = r["roofline"]
+    mem = r["memory"]["peak_bytes"] / 2 ** 30
+    return (f"{r['arch']:22s} {r['shape']:12s} ok "
+            f"c={rl['compute_s']*1e3:8.2f}ms m={rl['memory_s']*1e3:8.2f}ms "
+            f"coll={rl['collective_s']*1e3:8.2f}ms dom={rl['dominant']:10s} "
+            f"peak={mem:6.2f}GiB mfu<={rl['mfu_bound']*100:5.1f}% "
+            f"compile={r['compile_s']:.0f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quantized", action="store_true",
+                    help="decode cells: fp8 DAQ weights (QuantizedTensor)")
+    ap.add_argument("--kv-dtype", default="bfloat16",
+                    choices=["bfloat16", "float8_e4m3fn"],
+                    help="KV-cache storage dtype (fp8 halves cache traffic)")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for cfg in ASSIGNED:
+            for s in LM_SHAPES:
+                cells.append((cfg.name, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape))
+
+    n_bad = 0
+    for mp in meshes:
+        for arch, shape in cells:
+            r = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                         force=args.force, quantized=args.quantized,
+                         kv_dtype=args.kv_dtype)
+            print(("[2pod] " if mp else "[1pod] ") + _fmt_row(r), flush=True)
+            n_bad += r["status"] == "error"
+    if n_bad:
+        raise SystemExit(f"{n_bad} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+Everything here is allocation-free: batches are ShapeDtypeStructs, caches
+come from ``jax.eval_shape`` over ``model.init_cache``, and the train state
+from ``jax.eval_shape`` over ``init_train_state`` — full-size configs are
+only ever lowered, never materialized (assignment spec).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models.lm import Model
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def modality_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    if cfg.family == "vlm":
+        return {"image_embeds": sds((batch, cfg.n_image_tokens, cfg.d_model),
+                                    jnp.bfloat16)}
+    if cfg.family == "encdec":
+        frames = min(seq, cfg.enc_frames_cap)
+        return {"frames": sds((batch, frames, cfg.d_model), jnp.bfloat16)}
+    return {}
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+            **modality_specs(cfg, B, S)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": sds((B, S), jnp.int32),
+            **modality_specs(cfg, B, S)}
+
+
+def decode_specs(model: Model, shape: ShapeConfig):
+    """(tokens_spec, cache_spec) for one serve_step against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: model.init_cache(B, S))
+    return sds((B, 1), jnp.int32), cache
+
+
+def state_specs(model: Model, tc: TrainConfig):
+    from repro.launch.steps import init_train_state
+    return jax.eval_shape(
+        lambda k: init_train_state(model, tc, k), jax.random.PRNGKey(0))
+
+
+def quantized_param_specs(params_abstract, qcfg) -> dict:
+    """Abstract fp8 parameter tree: every quantizable leaf becomes a
+    QuantizedTensor ShapeDtypeStruct pair (storage + block scales), exactly
+    the layout ``quantize_tree(mode="storage")`` produces — lets the decode
+    dry-run lower the quantized serving path at full size with no
+    allocation."""
+    from repro.core.formats import get_format
+    from repro.core.policy import path_str, should_quantize
+    from repro.quant_runtime.qparams import QuantizedTensor
+
+    fmt = get_format(qcfg.fmt)
+    bs = qcfg.block_size
+
+    def one(path, leaf):
+        name = path_str(path)
+        if not should_quantize(name, leaf, qcfg.skip_patterns):
+            return leaf
+        lead, (I, O) = leaf.shape[:-2], leaf.shape[-2:]
+        if qcfg.granularity == "block":
+            scale_shape = lead + (-(-I // bs), 1, -(-O // bs), 1)
+        elif qcfg.granularity == "channel":
+            scale_shape = lead + (1, O)
+        else:
+            scale_shape = lead
+        return QuantizedTensor(
+            data=sds(leaf.shape, fmt.storage_dtype),
+            scale=sds(scale_shape, jnp.float32),
+            fmt=qcfg.fmt, granularity=qcfg.granularity, block_size=bs,
+            out_dtype="bfloat16")
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_abstract)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model,
+                tc: TrainConfig | None = None):
+    """The assignment-facing entry point: all abstract inputs for a cell.
+
+    Returns a dict with keys depending on shape.mode:
+      train   -> {"state": ..., "batch": ...}
+      prefill -> {"params": ..., "batch": ...}
+      decode  -> {"params": ..., "tokens": ..., "cache": ...}
+    """
+    tc = tc or TrainConfig()
+    if shape.mode == "train":
+        return {"state": state_specs(model, tc),
+                "batch": train_batch_specs(cfg, shape)}
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.mode == "prefill":
+        return {"params": params, "batch": prefill_batch_specs(cfg, shape)}
+    tokens, cache = decode_specs(model, shape)
+    return {"params": params, "tokens": tokens, "cache": cache}

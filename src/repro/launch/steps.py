@@ -1,0 +1,98 @@
+"""Jittable train / serve steps.
+
+``make_train_step`` builds the full training step: loss + grad (with remat
+policy), optional microbatch gradient accumulation (``lax.scan`` over
+micro-slices — memory scales with the micro batch, FLOPs unchanged),
+optional int8 error-feedback gradient compression, AdamW update.  Gradients
+reduce across data/pod axes implicitly through GSPMD (batch is dp-sharded,
+params are FSDP-sharded -> grads reduce-scatter back to the param layout).
+
+``make_serve_step`` / ``make_prefill_step`` build the inference steps the
+decode/prefill dry-run cells lower.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.lm import Model
+from repro.optim import (adamw_update, compress_grads, init_error_state,
+                         init_opt_state)
+
+
+def init_train_state(model: Model, tc: TrainConfig, key) -> dict:
+    params = model.init(key)
+    state = {"params": params, "opt": init_opt_state(params, tc)}
+    if tc.grad_compress == "int8_ef":
+        state["err"] = init_error_state(params)
+    return state
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model: Model, tc: TrainConfig):
+    n_micro = tc.microbatch if tc.microbatch > 1 else 0
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch, remat=tc.remat)
+        return loss, metrics
+
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if not n_micro:
+            return grad_fn(params, batch)
+        micro = _split_microbatches(batch, n_micro)
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            g, m = grad_fn(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"loss": jnp.float32(0), "aux_loss": jnp.float32(0),
+              "accuracy": jnp.float32(0), "n_tokens": jnp.float32(0)}
+        (g, m), _ = jax.lax.scan(body, (g0, m0), micro)
+        inv = 1.0 / n_micro
+        return (jax.tree.map(lambda x: x * inv, g),
+                jax.tree.map(lambda x: x * inv, m))
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        grads, metrics = compute_grads(params, batch)
+        new_state = dict(state)
+        if "err" in state:
+            grads, new_state["err"] = compress_grads(grads, state["err"])
+        new_params, new_opt, stats = adamw_update(params, grads,
+                                                  state["opt"], tc)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        return new_state, {**metrics, **stats}
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """One batched decode step: greedy next token + cache update."""
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, cache
+    return serve_step
+
+
+def make_prefill_step(model: Model, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+    return prefill_step

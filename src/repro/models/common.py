@@ -1,0 +1,188 @@
+"""Shared model building blocks: init helpers, norms, MLPs, RoPE, embeddings.
+
+Everything is pure-functional: params are nested dicts of arrays, apply
+functions take ``(params, x, ...)``.  Matmuls route through
+``repro.quant_runtime.qlinear`` so that any weight leaf may transparently be
+a :class:`QuantizedTensor` (the fp8 serving path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.quant_runtime import qlinear
+
+# Compute dtype for activations; params carry their own dtype.
+ACT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LLM init scales)."""
+    std = in_dim ** -0.5
+    return (std * jax.random.truncated_normal(
+        key, -3.0, 3.0, (in_dim, out_dim), jnp.float32)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    return (jax.random.truncated_normal(
+        key, -3.0, 3.0, (vocab, d_model), jnp.float32)).astype(dtype)
+
+
+def split(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    if cfg.norm == "layernorm":
+        return {"norm_scale": jnp.ones((cfg.d_model,), dtype),
+                "norm_bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"norm_scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm or LayerNorm depending on which params exist. fp32 internals."""
+    x32 = x.astype(jnp.float32)
+    if "norm_bias" in p:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["norm_scale"].astype(jnp.float32)
+                + p["norm_bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(ms + eps)
+    return (y * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_like(p: dict, width: int, dtype) -> dict:
+    """A norm param dict for a non-d_model width (e.g. SSM gated norm)."""
+    out = {"norm_scale": jnp.ones((width,), dtype)}
+    if "norm_bias" in p:
+        out["norm_bias"] = jnp.zeros((width,), dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int, dtype) -> dict:
+    ks = split(key, 3)
+    D = cfg.d_model
+    if cfg.act == "swiglu":
+        return {"w_gate": dense_init(ks[0], D, d_ff, dtype),
+                "w_up": dense_init(ks[1], D, d_ff, dtype),
+                "w_down": dense_init(ks[2], d_ff, D, dtype)}
+    return {"w_up": dense_init(ks[0], D, d_ff, dtype),
+            "w_down": dense_init(ks[1], d_ff, D, dtype)}
+
+
+def apply_mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in p:
+        g = qlinear.matmul(x, p["w_gate"])
+        u = qlinear.matmul(x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = qlinear.matmul(x, p["w_up"])
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return qlinear.matmul(h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions [...,S] -> cos/sin [..., S, head_dim/2] (fp32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, n_heads, head_dim]; cos/sin [..., S, head_dim/2]."""
+    half = x.shape[-1] // 2
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    c = cos[..., None, :]  # broadcast over heads axis
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": embed_init(k1, cfg.vocab_size, cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["w_head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return qlinear.take(p["embed"], tokens).astype(ACT_DTYPE)
+
+
+def lm_logits(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_head" in p:
+        return qlinear.matmul(x, p["w_head"])
+    table = qlinear.resolve(p["embed"])
+    return jnp.matmul(x, table.T.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (logits never fully materialized)
+# ---------------------------------------------------------------------------
+
+def chunked_xent(head_params: dict, x: jnp.ndarray, labels: jnp.ndarray,
+                 chunk: int = 512, mask: jnp.ndarray | None = None):
+    """Mean next-token cross-entropy, computed in sequence chunks.
+
+    x [B, S, D], labels [B, S] int32 (-1 = ignore).  Avoids materializing the
+    full [B, S, V] logits tensor: peak extra memory is [B, chunk, V_local].
+    Returns (loss, n_correct, n_valid) — all fp32 scalars.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n_chunks = max(S // chunk, 1)
+    rem = S - n_chunks * chunk
+    if mask is None:
+        mask = labels >= 0
+
+    def chunk_stats(xc, lc, mc):
+        logits = lm_logits(head_params, xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        lc_safe = jnp.maximum(lc, 0)
+        tgt = jnp.take_along_axis(logits, lc_safe[..., None], axis=-1)[..., 0]
+        nll = (logz - tgt) * mc
+        correct = (jnp.argmax(logits, axis=-1) == lc_safe) & (mc > 0)
+        return jnp.sum(nll), jnp.sum(correct.astype(jnp.float32)), jnp.sum(mc)
+
+    def body(carry, args):
+        l, c, n = chunk_stats(*args)
+        return (carry[0] + l, carry[1] + c, carry[2] + n), None
+
+    xs = (x[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D).swapaxes(0, 1),
+          labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1),
+          mask[:, : n_chunks * chunk].reshape(B, n_chunks, chunk)
+              .astype(jnp.float32).swapaxes(0, 1))
+    init = (jnp.float32(0), jnp.float32(0), jnp.float32(0))
+    (tot, cor, n), _ = jax.lax.scan(jax.checkpoint(body), init, xs)
+    if rem:
+        l, c, m = chunk_stats(x[:, -rem:], labels[:, -rem:],
+                              mask[:, -rem:].astype(jnp.float32))
+        tot, cor, n = tot + l, cor + c, n + m
+    n = jnp.maximum(n, 1.0)
+    return tot / n, cor / n, n

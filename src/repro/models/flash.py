@@ -1,0 +1,229 @@
+"""Flash attention in pure JAX with a custom VJP.
+
+Reverse-mode through a ``lax.scan`` online-softmax stacks every tile's
+residuals — O(S^2) memory, exactly what flash attention exists to avoid.
+This module gives attention the flash memory bound in both directions:
+
+* forward: online-softmax over kv tiles; saves only (out, lse);
+* backward: recomputes tile scores from (q, k, v, lse) — dq accumulated per
+  q-tile, dk/dv accumulated across q-tiles in carries the size of k/v.
+
+Implementation note: the tile loops are ``lax.fori_loop``, NOT ``lax.scan``.
+Inside a custom-VJP fwd/bwd the loops are never differentiated, and scan's
+partial-evaluation machinery hoists loop-invariant tile quantities (masks,
+position tiles, init-carry-derived values) out of enclosing layer scans,
+materializing all [nq, nk, B, Kv, G, cq, ck] tiles at once — observed as a
+persistent 8 GiB/device buffer on glm4-9b train_4k.  fori_loop has no
+ys/residual machinery, so tiles stay transient by construction.
+
+Tiles that are fully masked (above the causal diagonal / left of the
+sliding window) are skipped with ``lax.cond`` in both passes.
+
+Layout: q [B, Sq, Kv, G, hd] (grouped GQA — kv heads never repeated),
+k/v [B, Skv, Kv, hd].  ``mask`` is an f32 [B, Skv] validity row (1/0).
+All softmax math in fp32; matmul inputs stay in the input dtype.
+
+This is also the blueprint the TPU Pallas flash kernel follows; the pure-JAX
+version keeps every op MXU-shaped so XLA:TPU emits fused tiles from it.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _tile_scores(qc, kc, softcap: float):
+    """qc [B,cq,Kv,G,hd], kc [B,ck,Kv,hd] -> fp32 [B,Kv,G,cq,ck]."""
+    hd = qc.shape[-1]
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qc, kc,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _tile_mask(q_pos, kv_pos, mask_row, causal: bool, window: int):
+    """[B,1,1,cq,ck] boolean tile mask."""
+    m = (mask_row > 0)[:, None, None, None, :] \
+        & jnp.ones((1, 1, 1, q_pos.shape[0], 1), bool)
+    if causal:
+        cm = kv_pos[None, :] <= q_pos[:, None]
+        m = m & cm[None, None, None]
+    if window > 0:
+        wm = kv_pos[None, :] > (q_pos[:, None] - window)
+        m = m & wm[None, None, None]
+    return m
+
+
+def _dyn_chunk(x, i, c, axis=1):
+    """Slice chunk i of length c along `axis` (static axis)."""
+    starts = [0] * x.ndim
+    starts[axis] = i * c
+    sizes = list(x.shape)
+    sizes[axis] = c
+    return jax.lax.dynamic_slice(x, starts, sizes)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def flash_attention(q, k, v, mask, causal: bool, window: int, softcap: float,
+                    cq: int, ck: int):
+    """q [B,Sq,Kv,G,hd]; k,v [B,Skv,Kv,hd]; mask f32 [B,Skv].
+    Returns [B,Sq,Kv,G,hd] in q.dtype."""
+    out, _ = _fwd(q, k, v, mask, causal, window, softcap, cq, ck)
+    return out
+
+
+def _data_zero(ref) -> jnp.ndarray:
+    """Scalar fp32 zero that formally depends on ``ref``.
+
+    The mask row is often a trace-time constant (jnp.ones).  Everything
+    derived from (mask, iota positions) is then a constant subgraph, which
+    partial evaluation hoists out of the tile loops and materializes for
+    ALL [nq, nk, ...] tiles at once — O(S^2) persistent memory.  Tying the
+    mask to a data tensor keeps the tile masks inside the loops; XLA folds
+    the zero after partitioning."""
+    return (ref.reshape(-1)[0] * 0).astype(jnp.float32)
+
+
+def _fwd(q, k, v, mask, causal, window, softcap, cq, ck):
+    B, Sq, Kv, G, hd = q.shape
+    Skv = k.shape[1]
+    mask = mask + _data_zero(k)
+    nq, nk = Sq // cq, Skv // ck
+
+    out_buf = jnp.zeros((B, Sq, Kv, G, hd), jnp.float32)
+    lse_buf = jnp.zeros((B, Sq, Kv, G), jnp.float32)
+
+    def q_body(qi, bufs):
+        out_buf, lse_buf = bufs
+        qc = _dyn_chunk(q, qi, cq)
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_body(ki, carry):
+            # NOTE: no lax.cond tile-skipping here.  cond's partial-eval
+            # forces per-tile branch residuals to cross the known/unknown
+            # boundary, stacking all [nq, nk, ...] tiles (8-32 GiB/device
+            # observed).  Fully-masked tiles are computed and discarded;
+            # the causal 2x FLOP saving is recovered by the triangle
+            # iteration in EXPERIMENTS.md §Perf.
+            kv_pos = ki * ck + jnp.arange(ck)
+            m, l, acc = carry
+            kc = _dyn_chunk(k, ki, ck)
+            vc = _dyn_chunk(v, ki, ck)
+            mc = jax.lax.dynamic_slice(mask, (0, ki * ck), (B, ck))
+            s = _tile_scores(qc, kc, softcap)
+            tm = _tile_mask(q_pos, kv_pos, mc, causal, window)
+            s = jnp.where(tm, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(tm, p, 0.0)
+            corr = jnp.where(m <= NEG_INF, 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * corr[..., None] + pv)
+
+        shape = (B, Kv, G, cq)
+        init = (jnp.full(shape, NEG_INF, jnp.float32),
+                jnp.zeros(shape, jnp.float32),
+                jnp.zeros(shape + (hd,), jnp.float32))
+        m, l, acc = jax.lax.fori_loop(0, nk, kv_body, init)
+        l_safe = jnp.maximum(l, 1e-30)
+        o = (acc / l_safe[..., None]).transpose(0, 3, 1, 2, 4)  # [B,cq,Kv,G,hd]
+        lse = (m + jnp.log(l_safe)).transpose(0, 3, 1, 2)       # [B,cq,Kv,G]
+        out_buf = jax.lax.dynamic_update_slice(
+            out_buf, o, (0, qi * cq, 0, 0, 0))
+        lse_buf = jax.lax.dynamic_update_slice(
+            lse_buf, lse, (0, qi * cq, 0, 0))
+        return out_buf, lse_buf
+
+    out_buf, lse_buf = jax.lax.fori_loop(0, nq, q_body, (out_buf, lse_buf))
+    return out_buf.astype(q.dtype), lse_buf
+
+
+def _fwd_vjp(q, k, v, mask, causal, window, softcap, cq, ck):
+    out, lse = _fwd(q, k, v, mask, causal, window, softcap, cq, ck)
+    return out, (q, k, v, mask, out, lse)
+
+
+def _bwd_vjp(causal, window, softcap, cq, ck, res, dout):
+    q, k, v, mask, out, lse = res
+    mask = mask + _data_zero(dout)
+    B, Sq, Kv, G, hd = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // cq, Skv // ck
+    tau = hd ** -0.5
+
+    dout32 = dout.astype(jnp.float32)
+    # D_i = sum_h dout * out  (per query row)
+    Drow = jnp.sum(dout32 * out.astype(jnp.float32), axis=-1)  # [B,Sq,Kv,G]
+
+    dq_buf = jnp.zeros((B, Sq, Kv, G, hd), jnp.float32)
+    dk_buf = jnp.zeros((B, Skv, Kv, hd), jnp.float32)
+    dv_buf = jnp.zeros((B, Skv, Kv, hd), jnp.float32)
+
+    def q_body(qi, bufs):
+        dq_buf, dk_buf, dv_buf = bufs
+        qc = _dyn_chunk(q, qi, cq)
+        doc = _dyn_chunk(dout32, qi, cq)
+        q_pos = qi * cq + jnp.arange(cq)
+        lct = _dyn_chunk(lse, qi, cq).transpose(0, 2, 3, 1)   # [B,Kv,G,cq]
+        Dct = _dyn_chunk(Drow, qi, cq).transpose(0, 2, 3, 1)
+
+        def kv_body(ki, inner):
+            dq_c, dk_buf, dv_buf = inner
+            kv_pos = ki * ck + jnp.arange(ck)
+            kc = _dyn_chunk(k, ki, ck)
+            vc = _dyn_chunk(v, ki, ck)
+            mc = jax.lax.dynamic_slice(mask, (0, ki * ck), (B, ck))
+            s = _tile_scores(qc, kc, softcap)          # capped scores
+            tm = _tile_mask(q_pos, kv_pos, mc, causal, window)
+            s_m = jnp.where(tm, s, NEG_INF)
+            p = jnp.exp(s_m - lct[..., None])          # [B,Kv,G,cq,ck]
+            p = jnp.where(tm, p, 0.0)
+            dv_t = jnp.einsum("bkgqc,bqkgh->bckh", p, doc,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqkgh,bckh->bkgqc", doc,
+                            vc.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Dct[..., None])             # d(capped scores)
+            if softcap > 0:
+                ds = ds * (1.0 - (s / softcap) ** 2)
+            ds = ds * tau
+            dq_t = jnp.einsum("bkgqc,bckh->bqkgh", ds,
+                              kc.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            dk_t = jnp.einsum("bkgqc,bqkgh->bckh", ds,
+                              qc.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            dk_buf = jax.lax.dynamic_update_slice(
+                dk_buf,
+                jax.lax.dynamic_slice(
+                    dk_buf, (0, ki * ck, 0, 0), (B, ck, Kv, hd)) + dk_t,
+                (0, ki * ck, 0, 0))
+            dv_buf = jax.lax.dynamic_update_slice(
+                dv_buf,
+                jax.lax.dynamic_slice(
+                    dv_buf, (0, ki * ck, 0, 0), (B, ck, Kv, hd)) + dv_t,
+                (0, ki * ck, 0, 0))
+            return (dq_c + dq_t, dk_buf, dv_buf)
+
+        dq0 = jnp.zeros((B, cq, Kv, G, hd), jnp.float32)
+        dq_c, dk_buf, dv_buf = jax.lax.fori_loop(
+            0, nk, kv_body, (dq0, dk_buf, dv_buf))
+        dq_buf = jax.lax.dynamic_update_slice(
+            dq_buf, dq_c, (0, qi * cq, 0, 0, 0))
+        return dq_buf, dk_buf, dv_buf
+
+    dq_buf, dk_buf, dv_buf = jax.lax.fori_loop(
+        0, nq, q_body, (dq_buf, dk_buf, dv_buf))
+    return (dq_buf.astype(q.dtype), dk_buf.astype(k.dtype),
+            dv_buf.astype(v.dtype), jnp.zeros_like(mask))
+
+
+flash_attention.defvjp(_fwd_vjp, _bwd_vjp)

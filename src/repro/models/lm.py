@@ -1,0 +1,561 @@
+"""Model assembly for all six families (dense / moe / ssm / hybrid / encdec /
+vlm) behind one functional API.
+
+Layer stacking: every architecture is decomposed into a repeating **period**
+of layer specs (the smallest repeating group — 1 layer for dense, 8 for
+Jamba's 1:7 attn:mamba interleave, 5 for Llama-Vision's cross-attn cadence).
+Params for each position in the period are stacked on a leading
+``[n_periods, ...]`` axis and the forward pass ``lax.scan``s over periods, so
+HLO size is O(period), not O(depth) — a 95-layer model lowers as fast as a
+5-layer one.
+
+The same layer code serves train, prefill and decode; decode threads a cache
+pytree (stacked the same way) through the scan.  All matmuls route through
+``qlinear`` so fp8-quantized parameter trees run the identical code path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.common import (ACT_DTYPE, apply_mlp, apply_norm,
+                                 chunked_xent, embed_tokens, init_embed,
+                                 init_mlp, init_norm, lm_logits, split)
+
+LayerSpec = tuple[str, str]  # (mixer, ffn)
+
+
+# ---------------------------------------------------------------------------
+# Period layout per family
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig):
+    """Returns (prefix_specs, n_prefix, period_specs, n_periods)."""
+    fam = cfg.family
+    if fam == "dense":
+        return [], 0, [("attn", "mlp")], cfg.n_layers
+    if fam == "moe":
+        k = cfg.first_k_dense
+        prefix = [("attn", "mlp_dense")] if k else []
+        return prefix, k, [("attn", "moe")], cfg.n_layers - k
+    if fam == "ssm":
+        return [], 0, [("mamba", "none")], cfg.n_layers
+    if fam == "hybrid":
+        per = cfg.attn_every
+        specs = []
+        for i in range(per):
+            mixer = "attn" if i == per // 2 else "mamba"
+            ffn = "moe" if (cfg.moe_every and i % cfg.moe_every == cfg.moe_offset) \
+                else "mlp"
+            specs.append((mixer, ffn))
+        return [], 0, specs, cfg.n_layers // per
+    if fam == "vlm":
+        ce = cfg.cross_attn_every
+        specs = [("attn", "mlp")] * (ce - 1) + [("cross", "mlp")]
+        return [], 0, specs, cfg.n_layers // ce
+    if fam == "encdec":
+        # handled specially (two stacks); expose the decoder period here
+        return [], 0, [("attn_cross", "mlp")], cfg.n_dec_layers
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec, dtype) -> dict:
+    mixer, ffn = spec
+    ks = split(key, 4)
+    p: dict = {}
+    if mixer in ("attn", "enc_attn"):
+        p["ln1"] = init_norm(cfg, dtype)
+        p["attn"] = A.init_attn(ks[0], cfg, dtype)
+    elif mixer == "mamba":
+        p["ln1"] = init_norm(cfg, dtype)
+        p["mamba"] = SSM.init_mamba(ks[0], cfg, dtype)
+    elif mixer == "cross":
+        p["ln1"] = init_norm(cfg, dtype)
+        p["cross"] = A.init_attn(ks[0], cfg, dtype)
+    elif mixer == "attn_cross":
+        p["ln1"] = init_norm(cfg, dtype)
+        p["attn"] = A.init_attn(ks[0], cfg, dtype)
+        p["ln_x"] = init_norm(cfg, dtype)
+        p["xattn"] = A.init_attn(ks[3], cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if ffn == "mlp":
+        p["ln2"] = init_norm(cfg, dtype)
+        p["mlp"] = init_mlp(ks[1], cfg, cfg.d_ff, dtype)
+    elif ffn == "mlp_dense":
+        p["ln2"] = init_norm(cfg, dtype)
+        p["mlp"] = init_mlp(ks[1], cfg, cfg.d_ff_dense or cfg.d_ff, dtype)
+    elif ffn == "moe":
+        p["ln2"] = init_norm(cfg, dtype)
+        p["moe"] = MOE.init_moe(ks[2], cfg, dtype)
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return p
+
+
+def apply_layer_train(p: dict, x, cfg: ModelConfig, spec: LayerSpec, *,
+                      memory=None):
+    """Pre-norm residual layer.  Returns (x, aux_loss).
+
+    Every sublayer output is constrained to the (dp, seq-sharded) residual
+    layout BEFORE the residual add: the row-parallel out-projections then
+    lower to reduce-scatter instead of all-reduce+slice (Megatron SP) —
+    without this GSPMD all-reduces full [B,S,D] partials per sublayer
+    (llama-vision train: 3.1 TB/chip of all-reduce observed)."""
+    from repro.runtime import residual_constraint as rc
+    mixer, ffn = spec
+    aux = jnp.float32(0.0)
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        x = x + rc(A.self_attn_train(p["attn"], h, cfg, causal=True))
+    elif mixer == "enc_attn":
+        x = x + rc(A.self_attn_train(p["attn"], h, cfg, causal=False))
+    elif mixer == "mamba":
+        x = x + rc(SSM.mamba_train(p["mamba"], h, cfg))
+    elif mixer == "cross":
+        x = x + rc(A.cross_attn(p["cross"], h, memory, cfg))
+    elif mixer == "attn_cross":
+        x = x + rc(A.self_attn_train(p["attn"], h, cfg, causal=True))
+        hx = apply_norm(p["ln_x"], x, cfg.norm_eps)
+        x = x + rc(A.cross_attn(p["xattn"], hx, memory, cfg))
+    if ffn != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = MOE.apply_moe(p["moe"], h2, cfg)
+            x = x + rc(y)
+        else:
+            x = x + rc(apply_mlp(p["mlp"], h2))
+    return x, aux
+
+
+def _kv_eff(cfg: ModelConfig) -> int:
+    """Effective KV heads in decode caches (GQA repeat-sharding — see
+    runtime.kv_repeat_factor): Kv*r so the cache head axis shards over
+    `model` instead of replicating."""
+    from repro.runtime import kv_repeat_factor
+    Kv = cfg.n_kv_heads
+    if not Kv:
+        return 0
+    return Kv * kv_repeat_factor(Kv, cfg.n_heads // Kv, for_cache=True)
+
+
+def _cache_dtype():
+    from repro.runtime import flags
+    return jnp.dtype(flags["kv_cache_dtype"])
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     cache_len: int, mem_len: int = 0) -> dict:
+    """Zero decode cache for one layer.  SWA layers use a ring of window size."""
+    mixer, _ = spec
+    Kv, hd = _kv_eff(cfg), cfg.resolved_head_dim
+    cdt = _cache_dtype()
+    if mixer in ("attn", "enc_attn"):
+        sc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        return {"k": jnp.zeros((batch, sc, Kv, hd), cdt),
+                "v": jnp.zeros((batch, sc, Kv, hd), cdt)}
+    if mixer == "mamba":
+        return SSM.init_mamba_cache(cfg, batch)
+    if mixer == "cross":
+        return {"mk": jnp.zeros((batch, mem_len, Kv, hd), cdt),
+                "mv": jnp.zeros((batch, mem_len, Kv, hd), cdt)}
+    if mixer == "attn_cross":
+        sc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        return {"k": jnp.zeros((batch, sc, Kv, hd), cdt),
+                "v": jnp.zeros((batch, sc, Kv, hd), cdt),
+                "mk": jnp.zeros((batch, mem_len, Kv, hd), cdt),
+                "mv": jnp.zeros((batch, mem_len, Kv, hd), cdt)}
+    raise ValueError(mixer)
+
+
+def _ring_write(cache_k, cache_v, k_new, v_new, lengths):
+    """Write one kv into a ring cache at slot lengths % capacity."""
+    cap = cache_k.shape[1]
+    bidx = jnp.arange(k_new.shape[0])
+    slot = lengths % cap
+    ck = cache_k.at[bidx, slot].set(k_new[:, 0].astype(cache_k.dtype))
+    cv = cache_v.at[bidx, slot].set(v_new[:, 0].astype(cache_v.dtype))
+    return ck, cv
+
+
+def _attn_decode(p, x, cache, lengths, cfg: ModelConfig):
+    """Self-attn decode honoring ring (SWA) vs full caches."""
+    B = x.shape[0]
+    q, k, v = A.qkv_proj(p, x, cfg)
+    if cfg.rope_theta > 0:
+        cos, sin = A.rope_cos_sin(lengths[:, None], cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+        q = A.apply_rope(q, cos, sin)
+        k = A.apply_rope(k, cos, sin)
+    r = _kv_eff(cfg) // cfg.n_kv_heads
+    if r > 1:  # repeat-sharded cache (see _kv_eff)
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    cap = cache["k"].shape[1]
+    if cfg.sliding_window and cap == cfg.sliding_window:
+        ck, cv = _ring_write(cache["k"], cache["v"], k, v, lengths)
+        eff_len = jnp.minimum(lengths + 1, cap)
+        out = A.decode_attention(q, ck, cv, eff_len, softcap=cfg.attn_logit_softcap)
+    else:
+        ck, cv = A.write_cache(cache["k"], cache["v"], k, v, lengths)
+        out = A.decode_attention(q, ck, cv, lengths + 1,
+                                 window=cfg.sliding_window,
+                                 softcap=cfg.attn_logit_softcap)
+    from repro.quant_runtime import qlinear
+    y = qlinear.matmul(out.reshape(B, 1, -1), p["wo"])
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ck, cv
+    return y, new_cache
+
+
+def apply_layer_decode(p: dict, x, cache: dict, lengths, cfg: ModelConfig,
+                       spec: LayerSpec):
+    mixer, ffn = spec
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    if mixer in ("attn", "enc_attn"):
+        y, cache = _attn_decode(p["attn"], h, cache, lengths, cfg)
+        x = x + y
+    elif mixer == "mamba":
+        y, cache = SSM.mamba_decode(p["mamba"], h, cache, cfg)
+        x = x + y
+    elif mixer == "cross":
+        x = x + A.cross_attn_cached(p["cross"], h, cache["mk"], cache["mv"], cfg)
+    elif mixer == "attn_cross":
+        sub = {"k": cache["k"], "v": cache["v"]}
+        y, sub = _attn_decode(p["attn"], h, sub, lengths, cfg)
+        x = x + y
+        cache = {**cache, "k": sub["k"], "v": sub["v"]}
+        hx = apply_norm(p["ln_x"], x, cfg.norm_eps)
+        x = x + A.cross_attn_cached(p["xattn"], hx, cache["mk"], cache["mv"], cfg)
+    if ffn != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = MOE.apply_moe(p["moe"], h2, cfg)
+            x = x + y
+        else:
+            x = x + apply_mlp(p["mlp"], h2)
+    return x, cache
+
+
+def apply_layer_prefill(p: dict, x, cfg: ModelConfig, spec: LayerSpec, *,
+                        memory=None, cache_len: int = 0):
+    """Like train, but also returns the layer's decode cache."""
+    mixer, ffn = spec
+    B, S, _ = x.shape
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    cache: dict = {}
+    if mixer in ("attn", "enc_attn", "attn_cross"):
+        causal = mixer != "enc_attn"
+        q, k, v = A.qkv_proj(p["attn"], h, cfg)
+        if cfg.rope_theta > 0 and causal:
+            pos = jnp.arange(S)[None]
+            cos, sin = A.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+            q, k = A.apply_rope(q, cos, sin), A.apply_rope(k, cos, sin)
+        out = A.chunked_attention(q, k, v, causal=causal,
+                                  window=cfg.sliding_window,
+                                  softcap=cfg.attn_logit_softcap)
+        from repro.quant_runtime import qlinear
+        x = x + qlinear.matmul(out.reshape(B, S, -1), p["attn"]["wo"])
+        r = _kv_eff(cfg) // cfg.n_kv_heads
+        if r > 1:  # repeat-sharded cache layout
+            k = jnp.repeat(k, r, axis=2)
+            v = jnp.repeat(v, r, axis=2)
+        cdt = _cache_dtype()
+        sc = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        ck = jnp.zeros((B, sc, _kv_eff(cfg), cfg.resolved_head_dim), cdt)
+        cv = jnp.zeros_like(ck)
+        if cfg.sliding_window and sc == cfg.sliding_window:
+            n = min(S, sc)
+            positions = jnp.arange(S - n, S)
+            slots = positions % sc
+            ck = ck.at[:, slots].set(k[:, S - n:].astype(cdt))
+            cv = cv.at[:, slots].set(v[:, S - n:].astype(cdt))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k[:, :sc].astype(cdt), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v[:, :sc].astype(cdt), 0, axis=1)
+        cache["k"], cache["v"] = ck, cv
+        if mixer == "attn_cross":
+            hx = apply_norm(p["ln_x"], x, cfg.norm_eps)
+            x = x + A.cross_attn(p["xattn"], hx, memory, cfg)
+            mk, mv = A.precompute_cross_kv(p["xattn"], memory, cfg)
+            if r > 1:
+                mk = jnp.repeat(mk, r, axis=2)
+                mv = jnp.repeat(mv, r, axis=2)
+            cache["mk"], cache["mv"] = (mk.astype(_cache_dtype()),
+                                        mv.astype(_cache_dtype()))
+    elif mixer == "mamba":
+        y, cache = SSM.mamba_forward(p["mamba"], x, h, cfg, cache=None)
+        x = x + y
+    elif mixer == "cross":
+        x = x + A.cross_attn(p["cross"], h, memory, cfg)
+        mk, mv = A.precompute_cross_kv(p["cross"], memory, cfg)
+        rx = _kv_eff(cfg) // cfg.n_kv_heads
+        if rx > 1:
+            mk = jnp.repeat(mk, rx, axis=2)
+            mv = jnp.repeat(mv, rx, axis=2)
+        cache = {"mk": mk.astype(_cache_dtype()),
+                 "mv": mv.astype(_cache_dtype())}
+    if ffn != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = MOE.apply_moe(p["moe"], h2, cfg)
+            x = x + y
+        else:
+            x = x + apply_mlp(p["mlp"], h2)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked-period scans
+# ---------------------------------------------------------------------------
+
+def _init_stack(key, cfg, specs, n: int, dtype):
+    """Stacked params: {"L{i}": leaf[n, ...]} via vmapped per-layer init."""
+    def one_period(k):
+        kk = split(k, len(specs))
+        return {f"L{i}": init_layer(kk[i], cfg, specs[i], dtype)
+                for i in range(len(specs))}
+    return jax.vmap(one_period)(jax.random.split(key, n))
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots_saveable":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)  # "full"
+
+
+def run_stack_train(stack, x, cfg, specs, *, memory=None, remat="full"):
+    from repro.runtime import flags, residual_constraint
+
+    def body(carry, lp):
+        h, aux = carry
+        h = residual_constraint(h)
+        for i, spec in enumerate(specs):
+            h, a = apply_layer_train(lp[f"L{i}"], h, cfg, spec, memory=memory)
+            aux = aux + a
+        h = residual_constraint(h)
+        return (h, aux), None
+
+    if flags["unroll_layers"]:  # eager per-layer walk (calibration/debug)
+        n = jax.tree.leaves(stack)[0].shape[0]
+        carry = (x, jnp.float32(0.0))
+        for t in range(n):
+            carry, _ = body(carry, jax.tree.map(lambda l: l[t], stack))
+        return carry
+    (x, aux), _ = jax.lax.scan(_remat(body, remat), (x, jnp.float32(0.0)), stack)
+    return x, aux
+
+
+def run_stack_decode(stack, cache, x, lengths, cfg, specs):
+    def body(h, xs):
+        lp, lc = xs
+        nc = {}
+        for i, spec in enumerate(specs):
+            h, nci = apply_layer_decode(lp[f"L{i}"], h, lc[f"L{i}"], lengths,
+                                        cfg, spec)
+            nc[f"L{i}"] = nci
+        return h, nc
+    x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    return x, new_cache
+
+
+def run_stack_prefill(stack, x, cfg, specs, *, memory=None, cache_len=0):
+    def body(h, lp):
+        caches = {}
+        for i, spec in enumerate(specs):
+            h, c = apply_layer_prefill(lp[f"L{i}"], h, cfg, spec,
+                                       memory=memory, cache_len=cache_len)
+            caches[f"L{i}"] = c
+        return h, caches
+    x, cache = jax.lax.scan(body, x, stack)
+    return x, cache
+
+
+def _stack_cache(cfg, specs, n, batch, cache_len, mem_len=0):
+    one = {f"L{i}": init_layer_cache(cfg, specs[i], batch, cache_len, mem_len)
+           for i in range(len(specs))}
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), one)
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable            # (params, batch, remat=) -> (loss, metrics)
+    init_cache: Callable         # (batch, cache_len, **kw) -> cache
+    prefill: Callable            # (params, batch) -> (logits_last, cache)
+    decode_step: Callable        # (params, tokens, cache) -> (logits, cache)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    prefix_specs, n_prefix, specs, n_periods = layer_plan(cfg)
+
+    def init(key):
+        ks = split(key, 4)
+        p = {"embed": init_embed(ks[0], cfg, dtype),
+             "stack": _init_stack(ks[1], cfg, specs, n_periods, dtype),
+             "final_norm": init_norm(cfg, dtype)}
+        if n_prefix:
+            p["prefix"] = _init_stack(ks[2], cfg, prefix_specs, n_prefix, dtype)
+        return p
+
+    def _memory(params, batch):
+        if cfg.family == "vlm":
+            return batch["image_embeds"].astype(ACT_DTYPE)
+        return None
+
+    def loss_fn(params, batch, remat: str = "full"):
+        x = embed_tokens(params["embed"], batch["tokens"])
+        mem = _memory(params, batch)
+        aux = jnp.float32(0.0)
+        if n_prefix:
+            x, a = run_stack_train(params["prefix"], x, cfg, prefix_specs,
+                                   memory=mem, remat=remat)
+            aux = aux + a
+        x, a = run_stack_train(params["stack"], x, cfg, specs, memory=mem,
+                               remat=remat)
+        aux = aux + a
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        loss, acc, n_tok = chunked_xent(params["embed"], x, batch["labels"])
+        total = loss + aux
+        return total, {"loss": loss, "aux_loss": aux, "accuracy": acc,
+                       "n_tokens": n_tok}
+
+    def init_cache(batch, cache_len, mem_len: int = 0):
+        if cfg.family == "vlm":
+            mem_len = mem_len or cfg.n_image_tokens
+        c = {"stack": _stack_cache(cfg, specs, n_periods, batch, cache_len,
+                                   mem_len),
+             "lengths": jnp.zeros((batch,), jnp.int32)}
+        if n_prefix:
+            c["prefix"] = _stack_cache(cfg, prefix_specs, n_prefix, batch,
+                                       cache_len, mem_len)
+        return c
+
+    def prefill(params, batch, cache_len: int | None = None):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache_len = cache_len or S
+        x = embed_tokens(params["embed"], tokens)
+        mem = _memory(params, batch)
+        cache: dict = {}
+        if n_prefix:
+            x, cache["prefix"] = run_stack_prefill(
+                params["prefix"], x, cfg, prefix_specs, memory=mem,
+                cache_len=cache_len)
+        x, cache["stack"] = run_stack_prefill(
+            params["stack"], x, cfg, specs, memory=mem, cache_len=cache_len)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x[:, -1:])[:, 0]
+        cache["lengths"] = jnp.full((B,), S, jnp.int32)
+        return logits, cache
+
+    def decode_step(params, tokens, cache):
+        """tokens [B, 1] -> (logits [B, V], new cache)."""
+        x = embed_tokens(params["embed"], tokens)
+        lengths = cache["lengths"]
+        new_cache = dict(cache)
+        if n_prefix:
+            x, new_cache["prefix"] = run_stack_decode(
+                params["prefix"], cache["prefix"], x, lengths, cfg,
+                prefix_specs)
+        x, new_cache["stack"] = run_stack_decode(
+            params["stack"], cache["stack"], x, lengths, cfg, specs)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x)[:, 0]
+        new_cache["lengths"] = lengths + 1
+        return logits, new_cache
+
+    return Model(cfg, init, loss_fn, init_cache, prefill, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless-m4t): frames (stub frontend) -> text
+# ---------------------------------------------------------------------------
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    enc_specs = [("enc_attn", "mlp")]
+    dec_specs = [("attn_cross", "mlp")]
+
+    def init(key):
+        ks = split(key, 5)
+        return {
+            "embed": init_embed(ks[0], cfg, dtype),
+            "enc_stack": _init_stack(ks[1], cfg, enc_specs, cfg.n_enc_layers,
+                                     dtype),
+            "enc_norm": init_norm(cfg, dtype),
+            "stack": _init_stack(ks[2], cfg, dec_specs, cfg.n_dec_layers,
+                                 dtype),
+            "final_norm": init_norm(cfg, dtype),
+        }
+
+    def encode(params, frames, remat="full"):
+        x = frames.astype(ACT_DTYPE)
+        x, _ = run_stack_train(params["enc_stack"], x, cfg, enc_specs,
+                               remat=remat)
+        return apply_norm(params["enc_norm"], x, cfg.norm_eps)
+
+    def loss_fn(params, batch, remat: str = "full"):
+        mem = encode(params, batch["frames"], remat)
+        x = embed_tokens(params["embed"], batch["tokens"])
+        x, _ = run_stack_train(params["stack"], x, cfg, dec_specs,
+                               memory=mem, remat=remat)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        loss, acc, n_tok = chunked_xent(params["embed"], x, batch["labels"])
+        return loss, {"loss": loss, "aux_loss": jnp.float32(0.0),
+                      "accuracy": acc, "n_tokens": n_tok}
+
+    def init_cache(batch, cache_len, mem_len: int = 0):
+        mem_len = mem_len or cfg.enc_frames_cap
+        return {"stack": _stack_cache(cfg, dec_specs, cfg.n_dec_layers, batch,
+                                      cache_len, mem_len),
+                "lengths": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(params, batch, cache_len: int | None = None):
+        mem = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache_len = cache_len or S
+        x = embed_tokens(params["embed"], tokens)
+        x, cache = run_stack_prefill(params["stack"], x, cfg, dec_specs,
+                                     memory=mem, cache_len=cache_len)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x[:, -1:])[:, 0]
+        return logits, {"stack": cache,
+                        "lengths": jnp.full((B,), S, jnp.int32)}
+
+    def decode_step(params, tokens, cache):
+        x = embed_tokens(params["embed"], tokens)
+        lengths = cache["lengths"]
+        x, new_stack = run_stack_decode(params["stack"], cache["stack"], x,
+                                        lengths, cfg, dec_specs)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x)[:, 0]
+        return logits, {"stack": new_stack, "lengths": lengths + 1}
+
+    return Model(cfg, init, loss_fn, init_cache, prefill, decode_step)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN: grouped top-k routing with capacity (GShard form).
+
+Tokens are reshaped into groups [G, g, D]; routing produces dispatch /
+combine tensors [G, g, E, C] (C = per-group expert capacity), and expert
+compute is three big einsums over stacked expert weights [E, D, F] — the
+TPU-native formulation: everything is an MXU matmul, the expert axis shards
+cleanly over the ``model`` mesh axis (EP), and groups shard over ``data``.
+
+Top-k gates are renormalized over the selected experts (Mixtral convention).
+Tokens overflowing capacity are dropped (their combine weight is zero — the
+residual connection carries them through unchanged).  The load-balancing
+auxiliary loss follows Switch/GShard: E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, split
+from repro.quant_runtime import qlinear
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = split(key, 5)
+
+    def expert_stack(k, din, dout):
+        kk = jax.random.split(k, E)
+        return jax.vmap(lambda kx: dense_init(kx, din, dout, dtype))(kk)
+
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),  # fp32, never quantized
+        "w_gate": expert_stack(ks[1], D, F),             # [E, D, F]
+        "w_up": expert_stack(ks[2], D, F),
+        "w_down": expert_stack(ks[3], F, D),             # [E, F, D]
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        kk = split(ks[4], 3)
+        p["shared"] = {"w_gate": dense_init(kk[0], D, Fs, dtype),
+                       "w_up": dense_init(kk[1], D, Fs, dtype),
+                       "w_down": dense_init(kk[2], Fs, D, dtype)}
+    return p
+
+
+def _group_tokens(T: int, target: int = 1024) -> int:
+    """Largest group size <= target that divides T (prefer powers of two)."""
+    g = min(T, target)
+    while T % g:
+        g -= 1
+    return g
+
+
+def top_k_routing(logits: jnp.ndarray, top_k: int, capacity: int):
+    """logits [G, g, E] fp32 -> (dispatch [G,g,E,C] bool-ish, combine fp32,
+    aux_loss scalar).  Sequential greedy top-k with per-expert positions."""
+    G, g, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    masks, gates = [], []
+    p = probs
+    for _ in range(top_k):
+        idx = jnp.argmax(p, axis=-1)
+        m = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # [G,g,E]
+        gates.append(jnp.sum(probs * m, axis=-1))           # raw prob
+        masks.append(m)
+        p = p * (1.0 - m)
+
+    # renormalize gates over the selected experts
+    denom = jnp.maximum(sum(gates), 1e-9)
+    gates = [gv / denom for gv in gates]
+
+    # position of each token within its expert queue (across the k choices)
+    combine = jnp.zeros((G, g, E, capacity), jnp.float32)
+    prev_count = jnp.zeros((G, 1, E), jnp.float32)
+    for m, gv in zip(masks, gates):
+        pos_in_e = jnp.cumsum(m, axis=1) - m + prev_count    # [G,g,E]
+        prev_count = prev_count + jnp.sum(m, axis=1, keepdims=True)
+        pos = jnp.sum(pos_in_e * m, axis=-1)                 # [G,g]
+        within = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # [G,g,C]
+        combine = combine + (gv[..., None, None] * m[..., None]
+                             * within[:, :, None, :])
+
+    dispatch = (combine > 0).astype(jnp.bfloat16)
+
+    # Switch-style load balance loss
+    frac_tokens = jnp.mean(masks[0], axis=1)                 # [G, E]
+    frac_probs = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return dispatch, combine.astype(jnp.bfloat16), aux
+
+
+def apply_moe(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+              group_target: int = 0):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    from repro.runtime import flags
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = _group_tokens(T, group_target or flags["moe_group"])
+    G = T // g
+    cap = max(int(g * K * cfg.capacity_factor / E), 1)
+    # round capacity to a multiple of 8 for lane alignment
+    cap = -(-cap // 8) * 8
+
+    xt = x.reshape(G, g, D)
+    router_w = qlinear.resolve(p["router"])
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    dispatch, combine, aux = top_k_routing(logits, K, cap)
+
+    # dispatch tokens -> [E, G, C, D]
+    ex_in = jnp.einsum("gsec,gsd->egcd", dispatch, xt)
+    ex_in = ex_in.reshape(E, G * cap, D)
+
+    wg = qlinear.resolve(p["w_gate"]).astype(x.dtype)
+    wu = qlinear.resolve(p["w_up"]).astype(x.dtype)
+    wd = qlinear.resolve(p["w_down"]).astype(x.dtype)
+    h_g = jnp.einsum("etd,edf->etf", ex_in, wg)
+    h_u = jnp.einsum("etd,edf->etf", ex_in, wu)
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    ex_out = jnp.einsum("etf,efd->etd", h, wd)
+
+    y = jnp.einsum("gsec,egcd->gsd", combine,
+                   ex_out.reshape(E, G, cap, D).astype(jnp.bfloat16))
+    y = y.reshape(B, S, D).astype(x.dtype)
+
+    if "shared" in p:
+        from repro.models.common import apply_mlp
+        y = y + apply_mlp(p["shared"], x)
+    return y, aux * cfg.router_aux_loss

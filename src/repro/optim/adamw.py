@@ -1,0 +1,140 @@
+"""Pure-JAX AdamW with cosine schedule, global-norm clipping, and optional
+8-bit (block-quantized) optimizer state — the large-scale memory trick that
+makes trillion-parameter configs fit (see EXPERIMENTS.md kimi-k2 notes).
+
+State layout per parameter leaf:
+  fp32 mode : {"m": fp32, "v": fp32}
+  int8 mode : {"m": int8, "m_scale": fp32[blocks], "v": int8, "v_scale": ...}
+plus global {"step": int32}.
+
+The int8 moments use symmetric per-block (size 256 along the flattened axis)
+absmax quantization with dequant-update-requant each step — the classic
+8-bit Adam recipe (Dettmers et al.) adapted to a functional JAX update.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# int8 moment (de)quantization
+# ---------------------------------------------------------------------------
+
+def _q8(x: jnp.ndarray):
+    """fp32 -> (int8 [..., nb, BLOCK], fp32 scales [..., nb, 1]).
+
+    Blocks along the LAST axis only, so quantized moments keep the
+    parameter's leading layout and inherit its sharding (launch/sharding.py
+    appends a replicated block axis to the param spec)."""
+    L = x.shape[-1]
+    nb = -(-L // BLOCK)
+    pad = nb * BLOCK - L
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = x.reshape(*x.shape[:-1], nb, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True),
+                        1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    xb = q.astype(jnp.float32) * scale
+    x = xb.reshape(*xb.shape[:-2], xb.shape[-2] * BLOCK)
+    return x[..., : shape[-1]]
+
+
+# ---------------------------------------------------------------------------
+# Schedule
+# ---------------------------------------------------------------------------
+
+def lr_schedule(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+# ---------------------------------------------------------------------------
+# Init / update
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params: Any, tc: TrainConfig) -> dict:
+    int8 = tc.opt_state_dtype == "int8"
+
+    def leaf_state(p):
+        if int8:
+            z = jnp.zeros(p.shape, jnp.float32)
+            qm, sm = _q8(z)
+            return {"m": qm, "m_scale": sm, "v": qm, "v_scale": sm}
+        dt = jnp.dtype(tc.opt_state_dtype)
+        return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+
+    return {"mu": jax.tree.map(leaf_state, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params: Any, grads: Any, opt_state: dict, tc: TrainConfig):
+    """One AdamW step.  Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(tc, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if tc.grad_clip > 0 else jnp.float32(1.0)
+    b1, b2 = tc.b1, tc.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    int8 = tc.opt_state_dtype == "int8"
+
+    def leaf_update(p, g, s):
+        g = g.astype(jnp.float32) * clip
+        if int8:
+            m = _dq8(s["m"], s["m_scale"], p.shape)
+            # v is companded: int8 stores sqrt(v) — symmetric int8 directly
+            # on v zeroes small second moments (rsqrt blow-up); the sqrt
+            # compander keeps ~127 levels across v's usable dynamic range
+            v = _dq8(s["v"], s["v_scale"], p.shape) ** 2
+        else:
+            m = s["m"].astype(jnp.float32)
+            v = s["v"].astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+        wd = tc.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
+        new_p = (p.astype(jnp.float32) - lr * (upd + wd * p.astype(jnp.float32))
+                 ).astype(p.dtype)
+        if int8:
+            qm, sm = _q8(m)
+            qv, sv = _q8(jnp.sqrt(v))
+            new_s = {"m": qm, "m_scale": sm, "v": qv, "v_scale": sv}
+        else:
+            dt = s["m"].dtype
+            new_s = {"m": m.astype(dt), "v": v.astype(dt)}
+        return new_p, new_s
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = treedef.flatten_up_to(opt_state["mu"])
+    out = [leaf_update(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"mu": new_mu, "step": step}, stats

@@ -1,0 +1,66 @@
+"""Gradient compression for the data-parallel all-reduce: int8 with error
+feedback (EF-SGD style).
+
+At 1000+ node scale the gradient all-reduce crosses DCN/ICI pod boundaries;
+int8 compression cuts that traffic 4x (vs fp32) / 2x (vs bf16).  Error
+feedback keeps the quantization bias out of the long-run trajectory: the
+residual between the true gradient and its quantized form is added back
+before the next step's quantization, so compression error is O(1) instead of
+accumulating.
+
+This module is algebra-only (quantize/dequantize + residual bookkeeping);
+the actual collective stays a standard ``psum``/GSPMD all-reduce over the
+int8 payload inside the jitted step (XLA all-reduces the dequantized fp
+values; on real multi-host deployments the int8 tensor is what crosses the
+wire via ``jax.lax.all_gather`` of packed payloads — see
+``launch/train.py``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 512
+
+
+def _q(x: jnp.ndarray):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // BLOCK)
+    flat = jnp.pad(flat, (0, nb * BLOCK - n)).reshape(nb, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, err: Any):
+    """Returns (quant-dequant grads, new error state).
+
+    The returned grads are what the all-reduce sees; adding the residual to
+    ``err`` implements error feedback.
+    """
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = _q(g32)
+        gq = _dq(q, s, g.shape)
+        return gq.astype(g.dtype), g32 - gq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))

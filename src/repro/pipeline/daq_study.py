@@ -1,0 +1,327 @@
+"""End-to-end DAQ study: the paper's Tables 2-5 at CPU scale.
+
+Protocol (mirrors paper §3.1, DESIGN.md §7):
+  1. train a base LM on the plain bigram corpus           -> W_base
+  2. SFT it on the stylized corpus at low LR              -> W_post
+  3. quantize W_post under each setting; measure
+       ΔW-L2 / SignRate / CosSim  (exact, from quantize_tree)
+       Style / General            (rubric-proxy scores in [0, 2])
+
+Settings:
+  Table 2: BF16 base, BF16 post, AbsMax fp8 (block/channel),
+           SmoothQuant-fp8, AWQ-fp8 (per-channel, calibration-based)
+  Table 3: MSE-guided scale search  x {block, channel} x 3 ranges
+  Table 4: Sign-guided              x ...
+  Table 5: Cosine-guided            x ...
+
+Checkpoints are cached under ``experiments/study/`` so benchmark tables
+re-run instantly; ``--retrain`` forces a fresh pair.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig, QuantConfig, TrainConfig
+from repro.core.daq import absmax_tree, quantize_tree
+from repro.data import LanguageSpec, eval_scores
+from repro.models import build_model
+
+STUDY_DIR = "experiments/study"
+
+# The study model: dense glm4-family at CPU scale, sized so the stylized
+# behaviour is learnable yet the SFT delta stays small-magnitude (fragile
+# under fp8 — the paper's regime).
+STUDY_CFG = ModelConfig(
+    name="study-dense", family="dense", n_layers=3, d_model=96,
+    n_heads=6, n_kv_heads=2, d_ff=256, vocab_size=512, head_dim=16,
+    rope_theta=10000.0, source="study", notes="DAQ study model")
+
+BASE_TC = TrainConfig(learning_rate=1e-3, warmup_steps=30, total_steps=600,
+                      weight_decay=0.01, seed=0)
+SFT_TC = TrainConfig(learning_rate=5e-4, warmup_steps=10, total_steps=350,
+                     weight_decay=0.0, seed=1)
+BATCH, SEQ = 16, 128
+
+# Study quantization format.  At 100K-param scale E4M3's ~4% multiplicative
+# noise cannot erase behaviour (toy weights lack the heavy-tailed outlier
+# structure that makes fp8 destructive at 671B) — INT4 block-32 puts the
+# study in the paper's fragile-delta regime (the severe-noise setting the
+# paper itself proposes in §5).  fp8 rows are reported alongside in Table 2
+# for reference.  See EXPERIMENTS.md §Tables for the measured pattern.
+STUDY_FMT = "int4"
+STUDY_BLOCK = 32
+
+
+def language(cfg: ModelConfig = STUDY_CFG) -> LanguageSpec:
+    # hard_style: the style also permutes the bigram table — a behaviour
+    # distributed across many small weights (the paper's fragile regime),
+    # unlike the low-rank marker pattern which survives any fp8 noise.
+    return LanguageSpec(vocab=cfg.vocab_size, seed=1234, hard_style=True)
+
+
+def prepare_models(*, retrain: bool = False, study_dir: str = STUDY_DIR,
+                   base_steps: int | None = None,
+                   sft_steps: int | None = None):
+    """Returns (model, params_base, params_post), training if not cached."""
+    from repro import checkpoint as ckpt
+    from repro.launch.train import train_loop
+
+    cfg = STUDY_CFG
+    model = build_model(cfg)
+    spec = language(cfg)
+    base_dir = os.path.join(study_dir, "base")
+    sft_dir = os.path.join(study_dir, "sft")
+
+    base_tc = dataclasses.replace(
+        BASE_TC, total_steps=base_steps or BASE_TC.total_steps)
+    sft_tc = dataclasses.replace(
+        SFT_TC, total_steps=sft_steps or SFT_TC.total_steps)
+
+    if retrain:
+        import shutil
+        shutil.rmtree(study_dir, ignore_errors=True)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    if ckpt.latest(base_dir) != base_tc.total_steps:
+        print("[study] training base model...", flush=True)
+        train_loop(model, base_tc, batch_size=BATCH, seq=SEQ,
+                   steps=base_tc.total_steps, ckpt_dir=base_dir,
+                   save_every=200, style=False, language=spec,
+                   log_every=100)
+    from repro.launch.steps import init_train_state
+    state_shape = jax.eval_shape(
+        lambda k: init_train_state(model, base_tc, k), jax.random.PRNGKey(0))
+    base_state = ckpt.restore(base_dir, ckpt.latest(base_dir), state_shape)
+    params_base = base_state["params"]
+
+    if ckpt.latest(sft_dir) != sft_tc.total_steps:
+        print("[study] SFT on stylized corpus...", flush=True)
+        train_loop(model, sft_tc, batch_size=BATCH, seq=SEQ,
+                   steps=sft_tc.total_steps, ckpt_dir=sft_dir,
+                   save_every=200, style="mixed", language=spec,
+                   log_every=50, init_params=params_base)
+    sft_state_shape = jax.eval_shape(
+        lambda k: init_train_state(model, sft_tc, k), jax.random.PRNGKey(0))
+    sft_state = ckpt.restore(sft_dir, ckpt.latest(sft_dir), sft_state_shape)
+    params_post = sft_state["params"]
+    return model, params_base, params_post
+
+
+def evaluate(model, params, spec: LanguageSpec) -> dict:
+    # 32x192 ~ 6k positions per corpus: score noise ~ +-0.01
+    return eval_scores(model, params, spec, batch=32, seq=192, seed=999)
+
+
+def quantize_and_eval(model, params_post, params_base, qcfg: QuantConfig,
+                      spec: LanguageSpec, *, absmax_only: bool = False) -> dict:
+    fn = absmax_tree if absmax_only else quantize_tree
+    qparams, report = fn(params_post, params_base, qcfg, mode="dequant",
+                         out_dtype="float32")
+    scores = evaluate(model, qparams, spec)
+    g = report.global_chosen
+    return {
+        "delta_l2": g["delta_l2"], "sign_rate": g["sign_rate"],
+        "cosine": g["cosine"], "mse": g["mse"],
+        "style": scores["style"], "general": scores["general"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant / AWQ baselines (weight-only, calibration-based equalization)
+# ---------------------------------------------------------------------------
+
+def collect_input_stats(model, params, spec: LanguageSpec,
+                        n_batches: int = 2) -> list:
+    """Eager unrolled forward; returns [(w_shape, absmax[in])] in call order."""
+    from repro import runtime
+    from repro.data.synthetic import _full_logits, sample_batch
+    from repro.quant_runtime import qlinear
+
+    runtime.flags["unroll_layers"] = True
+    qlinear.RECORD = []
+    try:
+        for i in range(n_batches):
+            toks = sample_batch(jax.random.PRNGKey(500 + i), spec, 4, 64)
+            _full_logits(model, params,
+                         {"tokens": toks[:, :-1], "labels": toks[:, 1:]})
+        rec = qlinear.RECORD
+    finally:
+        qlinear.RECORD = None
+        runtime.flags["unroll_layers"] = False
+    # merge duplicate calls (same weight across batches) by call position
+    per_call = len(rec) // n_batches
+    merged = []
+    for j in range(per_call):
+        shapes = rec[j][0]
+        amax = jnp.stack([rec[j + b * per_call][1]
+                          for b in range(n_batches)]).max(0)
+        merged.append((shapes, amax))
+    return merged
+
+
+def _equalize_quantize(params_post, params_base, stats: list,
+                       qcfg: QuantConfig, *, mode: str) -> tuple:
+    """SmoothQuant (fixed alpha=0.5) or AWQ (alpha grid by output MSE):
+    quantize Q(W diag(s)) / diag(s) — numerically the same space as W, so
+    delta metrics stay well-defined (a bonus over the paper's absorbed
+    formulation)."""
+    from repro.core.formats import get_format
+    from repro.core.granularity import absmax_scale, apply_qdq
+    from repro.core import metrics as M
+    from repro.core.policy import path_str, should_quantize
+
+    fmt = get_format(qcfg.fmt)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_post)
+    base_leaves = jax.tree_util.tree_leaves(params_base)
+
+    # match recorded stats to leaves by (in_dim, out_dim) queue per shape
+    queues: dict[tuple, list] = {}
+    for shape, amax in stats:
+        queues.setdefault(shape, []).append(amax)
+
+    out = []
+    parts_c, parts_d = [], []
+    for (path, wp), wb in zip(flat, base_leaves):
+        name = path_str(path)
+        if not should_quantize(name, wp, qcfg.skip_patterns):
+            out.append(wp)
+            continue
+        wp32 = wp.astype(jnp.float32)
+        wb32 = wb.astype(jnp.float32)
+        dp = wp32 - wb32
+
+        def qdq_scaled(w2d, s_vec):
+            ws = w2d * s_vec[:, None]
+            sc = absmax_scale(ws, qcfg.granularity, fmt, qcfg.block_size)
+            return apply_qdq(ws, sc, qcfg.granularity, fmt,
+                             qcfg.block_size) / s_vec[:, None]
+
+        def leaf_2d(w2d, wb2d):
+            in_dim = w2d.shape[0]
+            key = tuple(w2d.shape)
+            amax = queues.get(key, [None]).pop(0) if queues.get(key) else None
+            if amax is None:
+                amax = jnp.ones((in_dim,), jnp.float32)
+            a = jnp.maximum(amax.astype(jnp.float32), 1e-6)
+            wmax = jnp.maximum(jnp.max(jnp.abs(w2d), axis=1), 1e-6)
+            if mode == "smoothquant":
+                s = jnp.sqrt(a) / jnp.sqrt(wmax)
+            else:  # awq: pick alpha minimizing activation-weighted error
+                best, best_err = None, jnp.inf
+                for alpha in (0.0, 0.25, 0.5, 0.75, 1.0):
+                    s_try = jnp.maximum(a ** alpha / wmax ** (1 - alpha), 1e-6)
+                    wq = qdq_scaled(w2d, s_try)
+                    err = jnp.sum(((wq - w2d) * a[:, None]) ** 2)
+                    best, best_err = jax.lax.cond(
+                        err < best_err, lambda: (s_try, err),
+                        lambda: (best, best_err)) if best is not None else \
+                        (s_try, err)
+                s = best
+            s = jnp.maximum(s / jnp.maximum(jnp.max(s), 1e-6), 1e-4)
+            return qdq_scaled(w2d, s)
+
+        if wp32.ndim == 2:
+            wq = leaf_2d(wp32, wb32)
+        else:  # stacked layers: per-slice stats in call order
+            slices = []
+            for t in range(wp32.shape[0]):
+                slices.append(leaf_2d(wp32[t], wb32[t]))
+            wq = jnp.stack(slices)
+        dq = wq - wb32
+        parts_c.append(M.partial_sums(dp, dq, tuple(range(dp.ndim))))
+        out.append(wq.astype(jnp.float32))
+
+    agg = {k: sum(jnp.sum(p[k]) for p in parts_c)
+           for k in ("sq_err", "n_sign_match", "dot", "dp_sq", "dq_sq",
+                     "count")}
+    gm = {k: float(v) for k, v in M.metrics_from_partials(agg).items()}
+    return jax.tree_util.tree_unflatten(treedef, out), gm
+
+
+def equalized_baseline(model, params_post, params_base, spec, *,
+                       mode: str, qcfg: QuantConfig) -> dict:
+    stats = collect_input_stats(model, params_post, spec)
+    qparams, gm = _equalize_quantize(params_post, params_base, stats, qcfg,
+                                     mode=mode)
+    scores = evaluate(model, qparams, spec)
+    return {"delta_l2": gm["delta_l2"], "sign_rate": gm["sign_rate"],
+            "cosine": gm["cosine"], "mse": gm["mse"],
+            "style": scores["style"], "general": scores["general"]}
+
+
+# ---------------------------------------------------------------------------
+# The tables
+# ---------------------------------------------------------------------------
+
+RANGES = [(0.5, 2.0), (0.8, 1.25), (0.9, 1.11)]
+
+
+def run_tables(tables=("2", "3", "4", "5"), *, retrain: bool = False,
+               out_path: str = os.path.join(STUDY_DIR, "tables.json"),
+               extra_qcfg: dict | None = None) -> dict:
+    model, params_base, params_post = prepare_models(retrain=retrain)
+    spec = language()
+    results: dict = json.load(open(out_path)) if os.path.exists(out_path) \
+        else {}
+
+    def put(table, row_name, row):
+        results.setdefault(table, {})[row_name] = row
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+        cols = " ".join(f"{k}={v:.4f}" for k, v in row.items()
+                        if isinstance(v, float))
+        print(f"[T{table}] {row_name:34s} {cols}", flush=True)
+
+    kw = {"fmt": STUDY_FMT, "block_size": STUDY_BLOCK, **(extra_qcfg or {})}
+    fmt_tag = kw["fmt"]
+
+    if "2" in tables:
+        if "base_bf16" not in results.get("2", {}):
+            s = evaluate(model, params_base, spec)
+            put("2", "base_bf16", {"style": s["style"],
+                                   "general": s["general"]})
+        if "post_bf16" not in results.get("2", {}):
+            s = evaluate(model, params_post, spec)
+            put("2", "post_bf16", {"style": s["style"], "general": s["general"],
+                                   "delta_l2": 0.0, "sign_rate": 1.0,
+                                   "cosine": 1.0})
+        for gran in ("block", "channel"):
+            for fmt in (fmt_tag, "fp8_e4m3"):
+                name = f"absmax_{fmt}_{gran}"
+                if name not in results.get("2", {}):
+                    q = QuantConfig(**{**kw, "fmt": fmt,
+                                       "granularity": gran})
+                    put("2", name, quantize_and_eval(
+                        model, params_post, params_base, q, spec,
+                        absmax_only=True))
+        for mode in ("smoothquant", "awq"):
+            name = f"{mode}_{fmt_tag}_channel"
+            if name not in results.get("2", {}):
+                q = QuantConfig(**{**kw, "granularity": "channel"})
+                put("2", name, equalized_baseline(
+                    model, params_post, params_base, spec, mode=mode,
+                    qcfg=q))
+
+    metric_tables = {"3": "mse", "4": "sign", "5": "cosine"}
+    for t, metric in metric_tables.items():
+        if t not in tables:
+            continue
+        for gran in ("block", "channel"):
+            for (lo, hi) in RANGES:
+                name = f"{metric}_{gran}_[{lo},{hi}]"
+                if name in results.get(t, {}):
+                    continue
+                q = QuantConfig(metric=metric, granularity=gran,
+                                alpha_min=lo, alpha_max=hi,
+                                n_coarse=5, n_fine=10, **kw)
+                put(t, name, quantize_and_eval(
+                    model, params_post, params_base, q, spec))
+    return results

@@ -1,0 +1,4 @@
+from repro.quant_runtime.qparams import QuantizedTensor
+from repro.quant_runtime import qlinear
+
+__all__ = ["QuantizedTensor", "qlinear"]

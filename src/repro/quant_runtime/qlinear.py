@@ -1,0 +1,50 @@
+"""Quantization-aware linear application.
+
+Every matmul in the model zoo routes through :func:`matmul` so that a weight
+leaf may transparently be either a dense array or a
+:class:`~repro.quant_runtime.qparams.QuantizedTensor`.
+
+On TPU the 2-D fp8 case uses the fused dequant-matmul Pallas kernel
+(`repro.kernels.fp8_matmul`); elsewhere (CPU dry-run / interpret) it
+dequantizes and lets XLA fuse the multiply into the matmul epilogue.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant_runtime.qparams import QuantizedTensor
+
+# Toggled by launch configs; kernels need a real TPU (or interpret mode).
+USE_KERNELS = False
+
+# Calibration hook: when set to a list, every matmul appends
+# (weight_shape, per-in-channel |x| max) -- used by the SmoothQuant/AWQ
+# baselines with runtime.flags["unroll_layers"] so values are concrete.
+RECORD: list | None = None
+
+
+def resolve(w):
+    """Return a dense array for a (possibly quantized) weight leaf."""
+    if isinstance(w, QuantizedTensor):
+        return w.dequantize()
+    return w
+
+
+def matmul(x: jnp.ndarray, w, *, precision=None) -> jnp.ndarray:
+    """x @ w with w possibly quantized. x: [..., in], w: [in, out]."""
+    if RECORD is not None and not isinstance(x, jax.core.Tracer):
+        RECORD.append((tuple(resolve(w).shape),
+                       jnp.max(jnp.abs(x.reshape(-1, x.shape[-1])), axis=0)))
+    if isinstance(w, QuantizedTensor):
+        if USE_KERNELS and w.ndim == 2 and w.fmt.startswith("fp8"):
+            from repro.kernels import fp8_matmul  # lazy: pallas import cost
+            return fp8_matmul.ops.matmul_fp8(x, w)
+        w = w.dequantize()
+    return jnp.matmul(x, w.astype(x.dtype), precision=precision)
+
+
+def take(embedding, ids):
+    """Embedding lookup with optional quantized table."""
+    table = resolve(embedding)
+    return jnp.take(table, ids, axis=0)

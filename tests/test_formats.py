@@ -1,0 +1,82 @@
+"""Unit + property tests: number formats and scale granularities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import FORMATS, dequantize, get_format, qdq, quantize
+from repro.core.granularity import (absmax_scale, apply_qdq, dequantize_stored,
+                                    from_blocked, pad_to_blocks, quantize_store,
+                                    to_blocked)
+
+FMT_NAMES = sorted(FORMATS)
+
+
+@pytest.mark.parametrize("fmt_name", FMT_NAMES)
+def test_qdq_idempotent(fmt_name):
+    """Quantizing an already-quantized tensor is a fixed point."""
+    fmt = get_format(fmt_name)
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.1
+    scale = jnp.float32(jnp.max(jnp.abs(w)) / fmt.qmax)
+    w1 = qdq(w, scale, fmt)
+    w2 = qdq(w1, scale, fmt)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("fmt_name", FMT_NAMES)
+def test_quantize_saturates(fmt_name):
+    fmt = get_format(fmt_name)
+    w = jnp.array([[1e6, -1e6, 0.0, 1e-12]])
+    q = quantize(w, jnp.float32(1.0), fmt)
+    dq = dequantize(q, jnp.float32(1.0), fmt)
+    assert float(jnp.max(jnp.abs(dq))) <= fmt.qmax
+    assert np.isfinite(np.asarray(dq, np.float32)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 40), st.sampled_from([4, 8, 16]))
+def test_block_roundtrip(i, o, bs):
+    w = np.random.RandomState(i * 100 + o).randn(i, o).astype(np.float32)
+    wp, orig = pad_to_blocks(jnp.asarray(w), bs)
+    back = from_blocked(to_blocked(wp, bs), orig)
+    np.testing.assert_array_equal(np.asarray(back), w)
+
+
+@pytest.mark.parametrize("gran", ["tensor", "channel", "block"])
+def test_absmax_scale_covers_range(gran):
+    """AbsMax scales never clip: |W/s| <= qmax everywhere."""
+    fmt = get_format("fp8_e4m3")
+    w = jax.random.normal(jax.random.PRNGKey(1), (96, 80)) * 3.0
+    s = absmax_scale(w, gran, fmt, block_size=32)
+    if gran == "block":
+        wp, _ = pad_to_blocks(w, 32)
+        ratio = jnp.abs(to_blocked(wp, 32)) / s
+    else:
+        ratio = jnp.abs(w) / s
+    assert float(jnp.max(ratio)) <= fmt.qmax * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("gran", ["tensor", "channel", "block"])
+@pytest.mark.parametrize("fmt_name", ["fp8_e4m3", "int8", "int4"])
+def test_store_dequant_matches_qdq(gran, fmt_name):
+    """storage-repr -> dequant == direct qdq (same numerics both paths)."""
+    fmt = get_format(fmt_name)
+    w = jax.random.normal(jax.random.PRNGKey(2), (65, 48)) * 0.2
+    s = absmax_scale(w, gran, fmt, block_size=32)
+    direct = apply_qdq(w, s, gran, fmt, 32)
+    q = quantize_store(w, s, gran, fmt, 32)
+    via_store = dequantize_stored(q, s, gran, fmt, 32, jnp.float32)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(via_store),
+                               atol=1e-6)
+
+
+def test_qdq_error_bounded_fp8():
+    """Relative qdq error of E4M3 under absmax scaling is < 2^-3."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 128))
+    fmt = get_format("fp8_e4m3")
+    s = absmax_scale(w, "tensor", fmt)
+    err = jnp.abs(qdq(w, s, fmt) - w)
+    # elementwise: error <= max(2^-4 * |w|... use 2^-3 * |w| + tiny denormal slack
+    bound = jnp.maximum(0.125 * jnp.abs(w), float(s) * 0.002)
+    assert bool(jnp.all(err <= bound + 1e-7))

@@ -1,0 +1,72 @@
+"""Delta-aware metric properties (paper Sec. 2.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+
+
+def _rand(seed, shape=(32, 16), scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def test_eq7_identity():
+    """Paper Eq. 7: delta-MSE == weight-MSE (base model cancels)."""
+    wb, wp = _rand(0), _rand(1)
+    wq = _rand(2)
+    lhs = M.mse(wp - wb, wq - wb)       # delta framing
+    rhs = jnp.mean((wq - wp) ** 2)       # direct reconstruction
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-5)
+
+
+def test_metric_ranges():
+    dp, dq = _rand(3), _rand(4)
+    assert 0.0 <= float(M.sign_rate(dp, dq)) <= 1.0
+    assert -1.0 - 1e-6 <= float(M.cosine(dp, dq)) <= 1.0 + 1e-6
+    assert float(M.mse(dp, dq)) >= 0.0
+
+
+def test_perfect_preservation():
+    dp = _rand(5)
+    assert float(M.sign_rate(dp, dp)) == 1.0
+    np.testing.assert_allclose(float(M.cosine(dp, dp)), 1.0, rtol=1e-6)
+    assert float(M.mse(dp, dp)) == 0.0
+    np.testing.assert_allclose(float(M.cosine(dp, -dp)), -1.0, rtol=1e-6)
+
+
+def test_sign_zero_convention():
+    """sign(0) = 0 participates: zero deltas only match zero deltas."""
+    dp = jnp.array([0.0, 0.0, 1.0, -1.0])
+    dq = jnp.array([0.0, 1.0, 1.0, 1.0])
+    assert float(M.sign_rate(dp, dq)) == 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_partial_sums_consistency(seed):
+    """Whole-tensor metrics == metrics reconstructed from partial sums."""
+    dp, dq = _rand(seed), _rand(seed + 1)
+    parts = M.partial_sums(dp, dq, axes=tuple(range(dp.ndim)))
+    rec = M.metrics_from_partials(parts)
+    np.testing.assert_allclose(float(rec["mse"]), float(M.mse(dp, dq)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(rec["sign_rate"]),
+                               float(M.sign_rate(dp, dq)), rtol=1e-6)
+    np.testing.assert_allclose(float(rec["cosine"]),
+                               float(M.cosine(dp, dq)), rtol=1e-5)
+
+
+def test_objective_direction():
+    """objective() is maximization-consistent for every metric."""
+    dp = _rand(6)
+    good, bad = dp, -dp
+    for m in ("mse", "sign", "cosine", "hybrid"):
+        assert float(M.objective(m, dp, good)) > float(M.objective(m, dp, bad))
+
+
+def test_cosine_scale_invariant():
+    dp, dq = _rand(7), _rand(8)
+    c1 = float(M.cosine(dp, dq))
+    c2 = float(M.cosine(dp, 3.7 * dq))
+    np.testing.assert_allclose(c1, c2, rtol=1e-5)

@@ -1,0 +1,135 @@
+"""Per-arch smoke tests (assignment deliverable f) + cache consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_arch, reduced
+from repro.models import build_model
+
+B, S = 2, 48
+KEY = jax.random.PRNGKey(0)
+
+ARCH_IDS = [c.name for c in ASSIGNED]
+
+
+def _batch(cfg, seq=S):
+    b = {"tokens": jax.random.randint(KEY, (B, seq), 0, cfg.vocab_size),
+         "labels": jax.random.randint(KEY, (B, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["image_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(KEY, (B, 24, cfg.d_model),
+                                        jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke(arch):
+    """Reduced config: one forward + loss; shapes + finiteness."""
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    loss, metrics = jax.jit(model.loss_fn)(params, _batch(cfg))
+    assert np.isfinite(float(loss)), arch
+    assert float(metrics["n_tokens"]) == B * S
+    # one train-grad step: finite grads on every leaf
+    g = jax.grad(lambda p: model.loss_fn(p, _batch(cfg))[0])(params)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]:
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), (arch, path)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode(arch):
+    """prefill -> decode_step produces [B, V] finite logits, cache advances."""
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b = _batch(cfg)
+    del b["labels"]
+    logits, cache = model.prefill(params, b, cache_len=S + 4)
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1)[:, None]
+    logits2, cache2 = jax.jit(model.decode_step)(params, tok, cache)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    assert int(cache2["lengths"][0]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "mamba2-780m", "jamba-v0.1-52b",
+                                  "seamless-m4t-medium"])
+def test_decode_matches_prefill(arch):
+    """Decoding token S from a cache == prefilling S+1 tokens directly."""
+    cfg = reduced(get_arch(arch))
+    if cfg.n_experts:  # capacity dropping differs between paths
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["frames"] = jax.random.normal(KEY, (B, 24, cfg.d_model),
+                                            jnp.bfloat16)
+    _, cache = model.prefill(params, {"tokens": toks[:, :S], **extra},
+                             cache_len=S + 8)
+    la, _ = model.decode_step(params, toks[:, S:S + 1], cache)
+    lb, _ = model.prefill(params, {"tokens": toks, **extra}, cache_len=S + 8)
+    rel = float(jnp.max(jnp.abs(la - lb)) / (jnp.max(jnp.abs(lb)) + 1e-9))
+    assert rel < 2e-2, (arch, rel)
+
+
+def test_sliding_window_ring_cache():
+    """Mixtral SWA ring cache: decode past the window stays exact."""
+    cfg = dataclasses.replace(reduced(get_arch("mixtral-8x22b")),
+                              capacity_factor=8.0)
+    assert cfg.sliding_window == 16
+    model = build_model(cfg)
+    params = model.init(KEY)
+    W = cfg.sliding_window
+    total = W + 9
+    toks = jax.random.randint(KEY, (B, total + 1), 0, cfg.vocab_size)
+    _, cache = model.prefill(params, {"tokens": toks[:, :total]},
+                             cache_len=W)  # ring-sized cache
+    assert cache["stack"]["L0"]["k"].shape[2] == W
+    la, _ = model.decode_step(params, toks[:, total:total + 1], cache)
+    lb, _ = model.prefill(params, {"tokens": toks}, cache_len=total + 1)
+    rel = float(jnp.max(jnp.abs(la - lb)) / (jnp.max(jnp.abs(lb)) + 1e-9))
+    assert rel < 2e-2, rel
+
+
+def test_param_count_close_to_analytic():
+    """Analytic param_count stays within 5% of the real tree (glm4 full)."""
+    for arch in ("glm4-9b", "mixtral-8x22b", "mamba2-780m"):
+        cfg = reduced(get_arch(arch))
+        model = build_model(cfg)
+        params = model.init(KEY)
+        real = sum(x.size for x in jax.tree.leaves(params))
+        approx = cfg.param_count()
+        assert abs(real - approx) / real < 0.05, (arch, real, approx)
+
+
+def test_quantized_params_serve_same_code():
+    """QuantizedTensor leaves run the identical decode path."""
+    from repro.configs import QuantConfig
+    from repro.core.daq import quantize_tree
+    cfg = reduced(get_arch("glm4-9b"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    base = jax.tree.map(lambda p: p * 0.99 if p.ndim >= 2 else p, params)
+    qparams, _ = quantize_tree(params, base,
+                               QuantConfig(granularity="channel"),
+                               mode="storage", out_dtype="bfloat16")
+    b = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    l_dense, _ = model.prefill(params, b, cache_len=S)
+    l_quant, cache = model.prefill(qparams, b, cache_len=S + 2)
+    assert l_quant.shape == l_dense.shape
+    # fp8 per-channel: logits stay close to the dense model's
+    rel = float(jnp.max(jnp.abs(l_quant - l_dense))
+                / (jnp.max(jnp.abs(l_dense)) + 1e-9))
+    assert rel < 0.25, rel
+    tok = jnp.argmax(l_quant, -1)[:, None]
+    l2, _ = model.decode_step(qparams, tok, cache)
+    assert np.isfinite(np.asarray(l2, np.float32)).all()
