@@ -62,7 +62,7 @@ def bench_fp8_matmul() -> None:
 
 def bench_quantize_tree() -> None:
     from repro.configs import QuantConfig
-    from repro.core.daq import quantize_tree
+    from repro.quantize import quantize
 
     key = jax.random.PRNGKey(0)
     base = {"l": {"w1": jax.random.normal(key, (8, 256, 256)) * 0.05,
@@ -70,8 +70,8 @@ def bench_quantize_tree() -> None:
     post = jax.tree.map(
         lambda p: p + 0.002 * jax.random.normal(jax.random.PRNGKey(1),
                                                 p.shape), base)
-    q = QuantConfig(metric="sign", granularity="block")
-    us = time_call(lambda: quantize_tree(post, base, q)[0])
+    q = QuantConfig(method="daq", metric="sign", granularity="block")
+    us = time_call(lambda: quantize(post, base, q)[0])
     n = sum(x.size for x in jax.tree.leaves(post))
     emit("daq.quantize_tree_1.6Mparam", us, f"params={n}")
 

@@ -3,15 +3,19 @@
   PYTHONPATH=src python examples/quickstart.py
 
 Builds a small LM, fabricates a (base, post-trained) pair, then quantizes
-to FP8 with each objective from the paper — watch SignRate/CosSim improve
-under the delta-aware metrics at (slightly) higher reconstruction MSE.
+to FP8 through the one public entry point ``repro.quantize.quantize`` —
+every method (the AbsMax baseline and each DAQ objective from the paper) is
+just a different ``QuantConfig.method`` / ``metric``.  Watch
+SignRate/CosSim improve under the delta-aware metrics at (slightly) higher
+reconstruction MSE.
 """
+import dataclasses
+
 import jax
-import jax.numpy as jnp
 
 from repro.configs import QuantConfig, get_arch, reduced
-from repro.core.daq import absmax_tree, quantize_tree
 from repro.models import build_model
+from repro.quantize import quantize
 
 
 def main():
@@ -33,18 +37,20 @@ def main():
 
     q0 = QuantConfig(granularity="block", block_size=32,
                      alpha_min=0.8, alpha_max=1.25)
-    _, rep = absmax_tree(params_post, params_base, q0)
-    g = rep.global_chosen
-    print(f"{'absmax':>10s} {'-':>12s} {g['sign_rate']:9.4f} "
-          f"{g['cosine']:8.4f} {g['delta_l2']:9.4f} {g['mse']:10.3e}")
 
-    import dataclasses
-    for metric in ("mse", "sign", "cosine", "hybrid"):
-        q = dataclasses.replace(q0, metric=metric)
-        _, rep = quantize_tree(params_post, params_base, q)
+    def row(name, arange, rep):
         g = rep.global_chosen
-        print(f"{metric:>10s} {'[0.8,1.25]':>12s} {g['sign_rate']:9.4f} "
+        print(f"{name:>10s} {arange:>12s} {g['sign_rate']:9.4f} "
               f"{g['cosine']:8.4f} {g['delta_l2']:9.4f} {g['mse']:10.3e}")
+
+    _, rep = quantize(params_post, params_base,
+                      dataclasses.replace(q0, method="absmax"))
+    row("absmax", "-", rep)
+
+    for metric in ("mse", "sign", "cosine", "hybrid"):
+        q = dataclasses.replace(q0, method="daq", metric=metric)
+        _, rep = quantize(params_post, params_base, q)
+        row(metric, "[0.8,1.25]", rep)
 
     print("\nNote: 'sign'/'cosine' preserve the post-training delta's "
           "direction better than 'mse', at equal storage cost — the "

@@ -12,10 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import QuantConfig, get_arch, reduced
-from repro.core.daq import quantize_tree
 from repro.data import LanguageSpec, sample_batch
 from repro.launch.serve import serve
 from repro.models import build_model
+from repro.quantize import quantize
 
 
 def main():
@@ -27,9 +27,9 @@ def main():
             jax.random.PRNGKey(1), p.shape).astype(p.dtype))
         if p.ndim >= 2 else p, params)
 
-    qcfg = QuantConfig(metric="sign", granularity="channel")
-    qparams, report = quantize_tree(params, base, qcfg, mode="storage",
-                                    out_dtype="bfloat16")
+    qcfg = QuantConfig(method="daq", metric="sign", granularity="channel")
+    qparams, report = quantize(params, base, qcfg, mode="storage",
+                               out_dtype="bfloat16")
     print(report.summary())
 
     spec = LanguageSpec(vocab=cfg.vocab_size)

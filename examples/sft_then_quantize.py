@@ -32,20 +32,22 @@ def main():
 
     print("\n-- FP8 quantization (block 32) --")
     rows = {
-        "absmax": (True, QuantConfig(granularity="block", block_size=32)),
-        "mse-search": (False, QuantConfig(metric="mse", granularity="block",
-                                          block_size=32, alpha_min=0.9,
-                                          alpha_max=1.11)),
-        "DAQ-sign": (False, QuantConfig(metric="sign", granularity="block",
-                                        block_size=32, alpha_min=0.8,
-                                        alpha_max=1.25)),
-        "DAQ-cosine": (False, QuantConfig(metric="cosine",
-                                          granularity="block", block_size=32,
-                                          alpha_min=0.9, alpha_max=1.11)),
+        "absmax": QuantConfig(method="absmax", granularity="block",
+                              block_size=32),
+        "smoothquant": QuantConfig(method="smoothquant",
+                                   granularity="channel"),
+        "mse-search": QuantConfig(metric="mse", granularity="block",
+                                  block_size=32, alpha_min=0.9,
+                                  alpha_max=1.11),
+        "DAQ-sign": QuantConfig(metric="sign", granularity="block",
+                                block_size=32, alpha_min=0.8,
+                                alpha_max=1.25),
+        "DAQ-cosine": QuantConfig(metric="cosine", granularity="block",
+                                  block_size=32, alpha_min=0.9,
+                                  alpha_max=1.11),
     }
-    for name, (absmax_only, q) in rows.items():
-        r = S.quantize_and_eval(model, params_post, params_base, q, spec,
-                                absmax_only=absmax_only)
+    for name, q in rows.items():
+        r = S.quantize_and_eval(model, params_post, params_base, q, spec)
         print(f"{name:11s} style={r['style']:.3f} general={r['general']:.3f} "
               f"sign={r['sign_rate']:.3f} cos={r['cosine']:.3f} "
               f"ΔL2={r['delta_l2']:.2f}")

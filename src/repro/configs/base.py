@@ -204,8 +204,14 @@ def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]
 
 @dataclass(frozen=True)
 class QuantConfig:
-    """DAQ instantiation (paper Sec. 2.2-2.4)."""
+    """Quantization settings (paper Sec. 2.2-2.4 plus baselines).
 
+    ``method`` selects the algorithm from the ``repro.quantize`` registry:
+    "daq" (paper Alg. 1, objective = ``metric``), "daq-per-block",
+    "absmax", "smoothquant", "awq".
+    """
+
+    method: str = "daq"              # registry key (repro.quantize)
     fmt: str = "fp8_e4m3"            # fp8_e4m3 | fp8_e5m2 | int8 | int4
     granularity: str = "block"       # tensor | channel | block
     block_size: int = 128

@@ -1,134 +1,40 @@
-"""Model-level DAQ: quantize a parameter pytree delta-aware.
+"""Deprecated model-level entry points — use :mod:`repro.quantize`.
 
-``quantize_tree`` walks (params_post, params_base) in lockstep, runs the
-coarse-to-fine scale search (Algorithm 1) on every quantizable leaf — with
-stacked-layer leaves ``[L, I, O]`` handled by vmapping the per-matrix search
-over the leading axes, i.e. one alpha per layer, exactly Alg. 1's per-layer
-loop — and returns either
-
-  * a tree of ``QuantizedTensor`` storage nodes (for serving), or
-  * a tree of dequantized fp32/bf16 weights (for evaluation),
-
-plus a :class:`QuantReport` with per-leaf and exact global delta metrics.
+``quantize_tree`` / ``absmax_tree`` were the original tree-walk API.  The
+walk (skip policy, partial-sum metric aggregation, storage-vs-dequant
+emission) now lives in :func:`repro.quantize.quantize` behind a pluggable
+method registry; these shims forward to it with the matching registry
+method and will be removed once external callers migrate.  ``QuantReport``
+is re-exported from its new home for legacy imports.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import QuantConfig
-from repro.core import metrics as M
-from repro.core.policy import path_str, should_quantize
-from repro.core.search import SearchResult, search_scale
-from repro.quant_runtime.qparams import QuantizedTensor
+from repro.quantize.api import QuantReport  # noqa: F401  (legacy re-export)
 
 
-@dataclass
-class QuantReport:
-    per_leaf: dict[str, dict] = field(default_factory=dict)
-    global_chosen: dict[str, float] = field(default_factory=dict)
-    global_default: dict[str, float] = field(default_factory=dict)
-    n_quantized: int = 0
-    n_skipped: int = 0
-    quantized_bytes: int = 0
-    original_bytes: int = 0
-
-    def summary(self) -> str:
-        g, d = self.global_chosen, self.global_default
-        lines = [
-            f"quantized {self.n_quantized} tensors ({self.n_skipped} skipped), "
-            f"{self.original_bytes / 1e6:.1f} MB -> {self.quantized_bytes / 1e6:.1f} MB",
-            f"  delta_l2   : {d.get('delta_l2', 0):.4g} -> {g.get('delta_l2', 0):.4g}",
-            f"  sign_rate  : {d.get('sign_rate', 0):.4f} -> {g.get('sign_rate', 0):.4f}",
-            f"  cosine     : {d.get('cosine', 0):.4f} -> {g.get('cosine', 0):.4f}",
-            f"  mse        : {d.get('mse', 0):.4g} -> {g.get('mse', 0):.4g}",
-        ]
-        return "\n".join(lines)
-
-
-def _leaf_search(w_post, w_base, qcfg: QuantConfig) -> SearchResult:
-    """Search on a >=2-D leaf; leading axes (stacked layers) are vmapped."""
-    fn = lambda p, b: search_scale(p, b, qcfg)
-    for _ in range(w_post.ndim - 2):
-        fn = jax.vmap(fn)
-    return fn(w_post, w_base)
-
-
-def _scalar_sum(x) -> float:
-    return float(jnp.sum(x))
+def _warn(old: str, new: str) -> None:
+    warnings.warn(f"repro.core.daq.{old} is deprecated; use "
+                  f"repro.quantize.quantize({new})", DeprecationWarning,
+                  stacklevel=3)
 
 
 def quantize_tree(params_post: Any, params_base: Any, qcfg: QuantConfig,
                   *, mode: str = "dequant",
                   out_dtype: str = "float32") -> tuple[Any, QuantReport]:
-    """Quantize every eligible leaf of ``params_post`` delta-aware.
-
-    mode:
-      "dequant" -- return dequantized float weights (evaluation / benchmarks)
-      "storage" -- return QuantizedTensor nodes (serving)
-    """
-    report = QuantReport()
-    post_leaves, treedef = jax.tree_util.tree_flatten_with_path(params_post)
-    base_leaves = jax.tree_util.tree_leaves(params_base)
-    if len(post_leaves) != len(base_leaves):
-        raise ValueError("post/base parameter trees differ in structure")
-
-    partial_keys = ("sq_err", "n_sign_match", "dot", "dp_sq", "dq_sq", "count")
-    agg_c = {k: 0.0 for k in partial_keys}
-    agg_d = {k: 0.0 for k in partial_keys}
-
-    out_leaves = []
-    for (path, w_post), w_base in zip(post_leaves, base_leaves):
-        name = path_str(path)
-        if not should_quantize(name, w_post, qcfg.skip_patterns):
-            report.n_skipped += 1
-            out_leaves.append(w_post)
-            continue
-        res = _leaf_search(w_post, w_base, qcfg)
-        report.n_quantized += 1
-        report.original_bytes += w_post.size * w_post.dtype.itemsize
-        for k in partial_keys:
-            agg_c[k] += _scalar_sum(res.chosen[k])
-            agg_d[k] += _scalar_sum(res.default[k])
-        report.per_leaf[name] = {
-            "alpha": jax.device_get(res.alpha),
-            "chosen": {m: _mean_metric(res.chosen, m) for m in
-                       ("mse", "sign_rate", "cosine", "delta_l2")},
-            "default": {m: _mean_metric(res.default, m) for m in
-                        ("mse", "sign_rate", "cosine", "delta_l2")},
-            "shape": tuple(w_post.shape),
-        }
-        if mode == "storage":
-            qt = QuantizedTensor(data=res.w_q, scale=res.scale, fmt=qcfg.fmt,
-                                 granularity=qcfg.granularity,
-                                 block_size=qcfg.block_size, out_dtype=out_dtype)
-            report.quantized_bytes += qt.nbytes()
-            out_leaves.append(qt)
-        else:
-            from repro.core.formats import get_format
-            report.quantized_bytes += (w_post.size * get_format(qcfg.fmt).bits // 8
-                                       + res.scale.size * 4)
-            out_leaves.append(res.w_dq.astype(jnp.dtype(out_dtype)))
-
-    agg_cj = {k: jnp.asarray(v) for k, v in agg_c.items()}
-    agg_dj = {k: jnp.asarray(v) for k, v in agg_d.items()}
-    report.global_chosen = {k: float(v) for k, v in M.metrics_from_partials(agg_cj).items()}
-    report.global_default = {k: float(v) for k, v in M.metrics_from_partials(agg_dj).items()}
-    return jax.tree_util.tree_unflatten(treedef, out_leaves), report
-
-
-def _mean_metric(d: dict, m: str) -> float:
-    """Per-leaf metric: mean over stacked layers when the leaf was vmapped."""
-    return float(jnp.mean(d[m]))
+    """Deprecated: ``repro.quantize.quantize(..., method="daq")``."""
+    from repro.quantize import quantize
+    _warn("quantize_tree", 'method="daq"')
+    return quantize(params_post, params_base, qcfg, mode=mode,
+                    out_dtype=out_dtype, method="daq")
 
 
 def absmax_tree(params_post: Any, params_base: Any, qcfg: QuantConfig,
                 **kw) -> tuple[Any, QuantReport]:
-    """AbsMax baseline = Alg. 1 with an empty search (alpha fixed at 1)."""
-    import dataclasses
-    base_cfg = dataclasses.replace(qcfg, n_coarse=1, n_fine=1, alpha_min=1.0,
-                                   alpha_max=1.0, per_block_alpha=False)
-    return quantize_tree(params_post, params_base, base_cfg, **kw)
+    """Deprecated: ``repro.quantize.quantize(..., method="absmax")``."""
+    from repro.quantize import quantize
+    _warn("absmax_tree", 'method="absmax"')
+    return quantize(params_post, params_base, qcfg, method="absmax", **kw)

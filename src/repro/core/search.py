@@ -38,11 +38,14 @@ class SearchResult:
     w_dq: jnp.ndarray           # dequantized weights Q_s(W_post), fp32
     chosen: dict                # metrics + partial sums at chosen alpha
     default: dict               # metrics + partial sums at alpha=1 (AbsMax)
+    eq_scale: jnp.ndarray | None = None  # per-in-channel equalization vector
+                                         # (SmoothQuant/AWQ); w_q stores W*s
 
 
 jax.tree_util.register_dataclass(
     SearchResult,
-    data_fields=["alpha", "scale", "w_q", "w_dq", "chosen", "default"],
+    data_fields=["alpha", "scale", "w_q", "w_dq", "chosen", "default",
+                 "eq_scale"],
     meta_fields=[],
 )
 
@@ -109,7 +112,13 @@ def search_scale(w_post: jnp.ndarray, w_base: jnp.ndarray,
     return _finalize(w_post, w_base, dp, best_alpha, s0, qcfg)
 
 
-def _metrics_and_partials(dp, dq):
+def metrics_and_partials(dp, dq):
+    """Whole-tensor metrics + full-reduction partial sums for (dp, dq).
+
+    The common currency of ``SearchResult.chosen`` / ``.default`` across all
+    registered quantization methods — ``repro.quantize`` aggregates the
+    partial sums into exact global model metrics.
+    """
     axes = tuple(range(dp.ndim))
     out = dict(M.all_metrics(dp, dq))
     out.update(M.partial_sums(dp, dq, axes))
@@ -121,9 +130,9 @@ def _finalize(w_post, w_base, dp, alpha, s0, qcfg: QuantConfig) -> SearchResult:
     scale = alpha * s0
     w_dq = apply_qdq(w_post, scale, qcfg.granularity, fmt, qcfg.block_size)
     w_q = quantize_store(w_post, scale, qcfg.granularity, fmt, qcfg.block_size)
-    chosen = _metrics_and_partials(dp, w_dq - w_base)
+    chosen = metrics_and_partials(dp, w_dq - w_base)
     w_dq0 = apply_qdq(w_post, s0, qcfg.granularity, fmt, qcfg.block_size)
-    default = _metrics_and_partials(dp, w_dq0 - w_base)
+    default = metrics_and_partials(dp, w_dq0 - w_base)
     return SearchResult(alpha=alpha, scale=scale, w_q=w_q, w_dq=w_dq,
                         chosen=chosen, default=default)
 

@@ -8,14 +8,19 @@ A deliberately small but real serving loop:
   the other slots keep decoding — the standard continuous-batching pattern
   reduced to slot granularity.  Per-slot lengths ride the cache's
   ``lengths`` vector, so mixed-progress batches are exact.
-* **Quantized weights** — pass ``--daq`` to run with fp8 DAQ weights: the
+* **Quantized weights** — pass ``--daq`` to serve fp8 weights quantized
+  through ``repro.quantize`` (method selectable via ``--method``): the
   parameter tree's matmul leaves become QuantizedTensor nodes and the same
   model code serves them (quant_runtime/qlinear.py); on TPU the fused
   dequant-matmul Pallas kernel takes over (kernels/fp8_matmul).
+  Delta-aware methods want a real base model — point ``--base-ckpt`` at a
+  checkpoint directory (e.g. ``experiments/study/base``); without it a
+  jittered copy stands in (with a loud warning — demo only).
 
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
-      --requests 6 --batch 2 --prompt-len 16 --gen 8 [--daq]
+      --requests 6 --batch 2 --prompt-len 16 --gen 8 \
+      [--daq [--method daq] [--base-ckpt experiments/study/base]]
 """
 from __future__ import annotations
 
@@ -97,6 +102,36 @@ def serve(model, params, requests: list[jnp.ndarray], *, batch: int,
     return [outputs[i] for i in sorted(outputs)]
 
 
+def _load_base_params(base_ckpt: str, params):
+    """Base tree for delta-aware quantization.
+
+    With ``--base-ckpt``: restore the real base model via repro.checkpoint
+    (accepts either a bare params tree or a train-state checkpoint with a
+    ``params`` sub-tree).  Without: fall back to a jittered copy of the
+    serving weights — delta metrics are then meaningless, so warn loudly.
+    """
+    if base_ckpt:
+        from repro import checkpoint as ckpt
+        step = ckpt.latest(base_ckpt)
+        if step is None:
+            raise SystemExit(f"--base-ckpt {base_ckpt}: no checkpoint found")
+        params_shape = jax.eval_shape(lambda: params)
+        # the manifest tells the layout apart: train-state checkpoints nest
+        # leaves under "params.", bare params trees don't — so a genuine
+        # restore failure (e.g. arch/shape mismatch) propagates as itself
+        leaves = ckpt.meta(base_ckpt, step)["leaves"]
+        if any(name.startswith("params.") for name in leaves):
+            return ckpt.restore(base_ckpt, step,
+                                {"params": params_shape})["params"]
+        return ckpt.restore(base_ckpt, step, params_shape)
+    print("[serve] WARNING: no --base-ckpt given; using a jittered copy of "
+          "the serving weights as the base model. Delta-aware metrics are "
+          "meaningless against a fake base — pass --base-ckpt for real use.",
+          flush=True)
+    return jax.tree.map(
+        lambda p: p - 0.01 * jnp.ones_like(p) * (p.ndim >= 2), params)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
@@ -106,9 +141,19 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--daq", action="store_true",
-                    help="serve DAQ fp8-quantized weights")
+                    help="serve fp8-quantized weights (repro.quantize)")
     ap.add_argument("--metric", default="sign")
+    ap.add_argument("--method", default="daq",
+                    help="quantization method registry key "
+                         "(daq | absmax | daq-per-block | ...)")
+    ap.add_argument("--base-ckpt", default="",
+                    help="checkpoint dir of the BASE model for delta-aware "
+                         "quantization (loaded via repro.checkpoint)")
     args = ap.parse_args()
+    if not args.daq and (args.base_ckpt or args.method != "daq"
+                         or args.metric != "sign"):
+        raise SystemExit("--method/--metric/--base-ckpt configure quantized "
+                         "serving and require --daq")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -119,18 +164,18 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    if args.daq:
-        from repro.core.daq import quantize_tree
-        qcfg = QuantConfig(metric=args.metric, granularity="channel")
-        # data-free DAQ needs a base model; for the demo, treat a jittered
-        # copy as the base (examples/sft_then_quantize.py does this properly)
-        base = jax.tree.map(
-            lambda p: p - 0.01 * jnp.ones_like(p) * (p.ndim >= 2), params)
-        params, report = quantize_tree(params, base, qcfg, mode="storage",
-                                       out_dtype="bfloat16")
-        print(report.summary())
-
     spec = LanguageSpec(vocab=cfg.vocab_size)
+    if args.daq:
+        from repro.quantize import quantize
+        qcfg = QuantConfig(method=args.method, metric=args.metric,
+                           granularity="channel")
+        base = _load_base_params(args.base_ckpt, params)
+        # model=/spec= feed the calibrate hook of calibration-based
+        # methods (smoothquant/awq); data-free methods ignore them
+        params, report = quantize(params, base, qcfg, mode="storage",
+                                  out_dtype="bfloat16", model=model,
+                                  spec=spec)
+        print(report.summary())
     prompts = [sample_batch(jax.random.PRNGKey(i), spec, 1,
                             args.prompt_len)[0] for i in range(args.requests)]
     cache_len = args.prompt_len + args.gen + 8

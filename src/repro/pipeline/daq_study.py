@@ -4,8 +4,14 @@ Protocol (mirrors paper §3.1, DESIGN.md §7):
   1. train a base LM on the plain bigram corpus           -> W_base
   2. SFT it on the stylized corpus at low LR              -> W_post
   3. quantize W_post under each setting; measure
-       ΔW-L2 / SignRate / CosSim  (exact, from quantize_tree)
+       ΔW-L2 / SignRate / CosSim  (exact, from repro.quantize)
        Style / General            (rubric-proxy scores in [0, 2])
+
+Every setting — AbsMax, DAQ x {mse, sign, cosine}, SmoothQuant, AWQ — runs
+through the one public entry point ``repro.quantize.quantize``; the method
+is selected by ``QuantConfig.method`` and calibration stats flow through
+the registry's ``calibrate`` hook.  This module holds only study
+orchestration (training, caching, eval, table emission).
 
 Settings:
   Table 2: BF16 base, BF16 post, AbsMax fp8 (block/channel),
@@ -24,13 +30,11 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ModelConfig, QuantConfig, TrainConfig
-from repro.core.daq import absmax_tree, quantize_tree
 from repro.data import LanguageSpec, eval_scores
 from repro.models import build_model
+from repro.quantize import quantize
 
 STUDY_DIR = "experiments/study"
 
@@ -120,10 +124,12 @@ def evaluate(model, params, spec: LanguageSpec) -> dict:
 
 
 def quantize_and_eval(model, params_post, params_base, qcfg: QuantConfig,
-                      spec: LanguageSpec, *, absmax_only: bool = False) -> dict:
-    fn = absmax_tree if absmax_only else quantize_tree
-    qparams, report = fn(params_post, params_base, qcfg, mode="dequant",
-                         out_dtype="float32")
+                      spec: LanguageSpec) -> dict:
+    """Quantize (method from ``qcfg.method``) and score; calibration-based
+    methods collect activation stats through the registry's hook."""
+    qparams, report = quantize(params_post, params_base, qcfg,
+                               mode="dequant", out_dtype="float32",
+                               model=model, spec=spec)
     scores = evaluate(model, qparams, spec)
     g = report.global_chosen
     return {
@@ -131,129 +137,6 @@ def quantize_and_eval(model, params_post, params_base, qcfg: QuantConfig,
         "cosine": g["cosine"], "mse": g["mse"],
         "style": scores["style"], "general": scores["general"],
     }
-
-
-# ---------------------------------------------------------------------------
-# SmoothQuant / AWQ baselines (weight-only, calibration-based equalization)
-# ---------------------------------------------------------------------------
-
-def collect_input_stats(model, params, spec: LanguageSpec,
-                        n_batches: int = 2) -> list:
-    """Eager unrolled forward; returns [(w_shape, absmax[in])] in call order."""
-    from repro import runtime
-    from repro.data.synthetic import _full_logits, sample_batch
-    from repro.quant_runtime import qlinear
-
-    runtime.flags["unroll_layers"] = True
-    qlinear.RECORD = []
-    try:
-        for i in range(n_batches):
-            toks = sample_batch(jax.random.PRNGKey(500 + i), spec, 4, 64)
-            _full_logits(model, params,
-                         {"tokens": toks[:, :-1], "labels": toks[:, 1:]})
-        rec = qlinear.RECORD
-    finally:
-        qlinear.RECORD = None
-        runtime.flags["unroll_layers"] = False
-    # merge duplicate calls (same weight across batches) by call position
-    per_call = len(rec) // n_batches
-    merged = []
-    for j in range(per_call):
-        shapes = rec[j][0]
-        amax = jnp.stack([rec[j + b * per_call][1]
-                          for b in range(n_batches)]).max(0)
-        merged.append((shapes, amax))
-    return merged
-
-
-def _equalize_quantize(params_post, params_base, stats: list,
-                       qcfg: QuantConfig, *, mode: str) -> tuple:
-    """SmoothQuant (fixed alpha=0.5) or AWQ (alpha grid by output MSE):
-    quantize Q(W diag(s)) / diag(s) — numerically the same space as W, so
-    delta metrics stay well-defined (a bonus over the paper's absorbed
-    formulation)."""
-    from repro.core.formats import get_format
-    from repro.core.granularity import absmax_scale, apply_qdq
-    from repro.core import metrics as M
-    from repro.core.policy import path_str, should_quantize
-
-    fmt = get_format(qcfg.fmt)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params_post)
-    base_leaves = jax.tree_util.tree_leaves(params_base)
-
-    # match recorded stats to leaves by (in_dim, out_dim) queue per shape
-    queues: dict[tuple, list] = {}
-    for shape, amax in stats:
-        queues.setdefault(shape, []).append(amax)
-
-    out = []
-    parts_c, parts_d = [], []
-    for (path, wp), wb in zip(flat, base_leaves):
-        name = path_str(path)
-        if not should_quantize(name, wp, qcfg.skip_patterns):
-            out.append(wp)
-            continue
-        wp32 = wp.astype(jnp.float32)
-        wb32 = wb.astype(jnp.float32)
-        dp = wp32 - wb32
-
-        def qdq_scaled(w2d, s_vec):
-            ws = w2d * s_vec[:, None]
-            sc = absmax_scale(ws, qcfg.granularity, fmt, qcfg.block_size)
-            return apply_qdq(ws, sc, qcfg.granularity, fmt,
-                             qcfg.block_size) / s_vec[:, None]
-
-        def leaf_2d(w2d, wb2d):
-            in_dim = w2d.shape[0]
-            key = tuple(w2d.shape)
-            amax = queues.get(key, [None]).pop(0) if queues.get(key) else None
-            if amax is None:
-                amax = jnp.ones((in_dim,), jnp.float32)
-            a = jnp.maximum(amax.astype(jnp.float32), 1e-6)
-            wmax = jnp.maximum(jnp.max(jnp.abs(w2d), axis=1), 1e-6)
-            if mode == "smoothquant":
-                s = jnp.sqrt(a) / jnp.sqrt(wmax)
-            else:  # awq: pick alpha minimizing activation-weighted error
-                best, best_err = None, jnp.inf
-                for alpha in (0.0, 0.25, 0.5, 0.75, 1.0):
-                    s_try = jnp.maximum(a ** alpha / wmax ** (1 - alpha), 1e-6)
-                    wq = qdq_scaled(w2d, s_try)
-                    err = jnp.sum(((wq - w2d) * a[:, None]) ** 2)
-                    best, best_err = jax.lax.cond(
-                        err < best_err, lambda: (s_try, err),
-                        lambda: (best, best_err)) if best is not None else \
-                        (s_try, err)
-                s = best
-            s = jnp.maximum(s / jnp.maximum(jnp.max(s), 1e-6), 1e-4)
-            return qdq_scaled(w2d, s)
-
-        if wp32.ndim == 2:
-            wq = leaf_2d(wp32, wb32)
-        else:  # stacked layers: per-slice stats in call order
-            slices = []
-            for t in range(wp32.shape[0]):
-                slices.append(leaf_2d(wp32[t], wb32[t]))
-            wq = jnp.stack(slices)
-        dq = wq - wb32
-        parts_c.append(M.partial_sums(dp, dq, tuple(range(dp.ndim))))
-        out.append(wq.astype(jnp.float32))
-
-    agg = {k: sum(jnp.sum(p[k]) for p in parts_c)
-           for k in ("sq_err", "n_sign_match", "dot", "dp_sq", "dq_sq",
-                     "count")}
-    gm = {k: float(v) for k, v in M.metrics_from_partials(agg).items()}
-    return jax.tree_util.tree_unflatten(treedef, out), gm
-
-
-def equalized_baseline(model, params_post, params_base, spec, *,
-                       mode: str, qcfg: QuantConfig) -> dict:
-    stats = collect_input_stats(model, params_post, spec)
-    qparams, gm = _equalize_quantize(params_post, params_base, stats, qcfg,
-                                     mode=mode)
-    scores = evaluate(model, qparams, spec)
-    return {"delta_l2": gm["delta_l2"], "sign_rate": gm["sign_rate"],
-            "cosine": gm["cosine"], "mse": gm["mse"],
-            "style": scores["style"], "general": scores["general"]}
 
 
 # ---------------------------------------------------------------------------
@@ -298,17 +181,17 @@ def run_tables(tables=("2", "3", "4", "5"), *, retrain: bool = False,
                 name = f"absmax_{fmt}_{gran}"
                 if name not in results.get("2", {}):
                     q = QuantConfig(**{**kw, "fmt": fmt,
-                                       "granularity": gran})
+                                       "granularity": gran,
+                                       "method": "absmax"})
                     put("2", name, quantize_and_eval(
-                        model, params_post, params_base, q, spec,
-                        absmax_only=True))
-        for mode in ("smoothquant", "awq"):
-            name = f"{mode}_{fmt_tag}_channel"
+                        model, params_post, params_base, q, spec))
+        for method in ("smoothquant", "awq"):
+            name = f"{method}_{fmt_tag}_channel"
             if name not in results.get("2", {}):
-                q = QuantConfig(**{**kw, "granularity": "channel"})
-                put("2", name, equalized_baseline(
-                    model, params_post, params_base, spec, mode=mode,
-                    qcfg=q))
+                q = QuantConfig(**{**kw, "granularity": "channel",
+                                   "method": method})
+                put("2", name, quantize_and_eval(
+                    model, params_post, params_base, q, spec))
 
     metric_tables = {"3": "mse", "4": "sign", "5": "cosine"}
     for t, metric in metric_tables.items():

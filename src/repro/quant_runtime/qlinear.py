@@ -19,9 +19,28 @@ from repro.quant_runtime.qparams import QuantizedTensor
 USE_KERNELS = False
 
 # Calibration hook: when set to a list, every matmul appends
-# (weight_shape, per-in-channel |x| max) -- used by the SmoothQuant/AWQ
-# baselines with runtime.flags["unroll_layers"] so values are concrete.
+# (weight_shape, weight_fingerprint, per-in-channel |x| max) -- used by the
+# SmoothQuant/AWQ methods with runtime.flags["unroll_layers"] so values are
+# concrete.
 RECORD: list | None = None
+
+
+def weight_fingerprint(w) -> tuple:
+    """Stable identity of a dense 2-D weight for calibration matching.
+
+    Shape alone collides (wq/wo, wk/wv, gate/up all share shapes), so stats
+    are keyed by sampled values instead: bf16->f32 casts are exact, so the
+    fingerprint computed here during the forward equals the one computed
+    from the parameter-tree leaf at quantization time.
+
+    Contract: fingerprints only match when calibration and quantization run
+    on the same backend/JAX build (the mean-abs reduction order must be
+    identical).  A serialized ``calib=`` list from a different device class
+    may miss every lookup — the equalize methods warn on the first miss.
+    """
+    w32 = jnp.asarray(w, jnp.float32)
+    return (float(w32[0, 0]), float(w32[-1, -1]),
+            float(jnp.mean(jnp.abs(w32))))
 
 
 def resolve(w):
@@ -34,10 +53,14 @@ def resolve(w):
 def matmul(x: jnp.ndarray, w, *, precision=None) -> jnp.ndarray:
     """x @ w with w possibly quantized. x: [..., in], w: [in, out]."""
     if RECORD is not None and not isinstance(x, jax.core.Tracer):
-        RECORD.append((tuple(resolve(w).shape),
+        w_res = resolve(w)
+        RECORD.append((tuple(w_res.shape), weight_fingerprint(w_res),
                        jnp.max(jnp.abs(x.reshape(-1, x.shape[-1])), axis=0)))
     if isinstance(w, QuantizedTensor):
-        if USE_KERNELS and w.ndim == 2 and w.fmt.startswith("fp8"):
+        # fused kernel dequantizes q*scale only; equalized tensors need the
+        # extra /eq_scale epilogue, so they take the XLA dequantize path
+        if USE_KERNELS and w.ndim == 2 and w.fmt.startswith("fp8") \
+                and w.eq_scale is None:
             from repro.kernels import fp8_matmul  # lazy: pallas import cost
             return fp8_matmul.ops.matmul_fp8(x, w)
         w = w.dequantize()

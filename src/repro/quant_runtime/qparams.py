@@ -25,6 +25,8 @@ class QuantizedTensor:
     granularity: str = "block"   # static
     block_size: int = 128        # static
     out_dtype: str = "bfloat16"  # static: dequantization target dtype
+    eq_scale: jnp.ndarray | None = None  # per-in-channel equalization s:
+                                         # data stores Q(W*s), dequant /= s
 
     @property
     def shape(self):
@@ -37,23 +39,31 @@ class QuantizedTensor:
     def dequantize(self) -> jnp.ndarray:
         fmt = get_format(self.fmt)
         dt = jnp.dtype(self.out_dtype)
-        if self.data.ndim == 2:
-            return dequantize_stored(self.data, self.scale, self.granularity,
-                                     fmt, self.block_size, dt)
+        if self.eq_scale is None:
+            fn = lambda d, s: dequantize_stored(d, s, self.granularity, fmt,
+                                                self.block_size, dt)
+            args = (self.data, self.scale)
+        else:
+            def fn(d, s, e):
+                w = dequantize_stored(d, s, self.granularity, fmt,
+                                      self.block_size, jnp.float32)
+                return (w / e[:, None]).astype(dt)
+            args = (self.data, self.scale, self.eq_scale)
         # stacked layers: vmap the 2-D dequant over leading axes
-        fn = lambda d, s: dequantize_stored(d, s, self.granularity, fmt,
-                                            self.block_size, dt)
         for _ in range(self.data.ndim - 2):
             fn = jax.vmap(fn)
-        return fn(self.data, self.scale)
+        return fn(*args)
 
     def nbytes(self) -> int:
         fmt = get_format(self.fmt)
-        return self.data.size * fmt.bits // 8 + self.scale.size * 4
+        n = self.data.size * fmt.bits // 8 + self.scale.size * 4
+        if self.eq_scale is not None:
+            n += self.eq_scale.size * 4
+        return n
 
 
 jax.tree_util.register_dataclass(
     QuantizedTensor,
-    data_fields=["data", "scale"],
+    data_fields=["data", "scale", "eq_scale"],
     meta_fields=["fmt", "granularity", "block_size", "out_dtype"],
 )

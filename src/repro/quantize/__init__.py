@@ -1,0 +1,17 @@
+"""Public quantization API: one entry point, a pluggable method registry.
+
+    from repro.quantize import quantize
+    qtree, report = quantize(params_post, params_base,
+                             QuantConfig(method="daq", metric="sign"))
+
+See README.md §"Public quantization API" and :mod:`repro.quantize.api`.
+"""
+from repro.quantize.api import LeafContext, QuantReport, Quantizer, quantize
+from repro.quantize.daq import AbsMaxQuantizer, DAQQuantizer  # noqa: F401
+from repro.quantize.equalize import collect_input_stats
+from repro.quantize.registry import available_methods, get_method, register
+
+__all__ = [
+    "LeafContext", "QuantReport", "Quantizer", "quantize",
+    "collect_input_stats", "available_methods", "get_method", "register",
+]

@@ -1,0 +1,221 @@
+"""The public quantization surface: ``quantize(params_post, params_base, qcfg)``.
+
+One entry point owns the parameter-tree walk, the skip policy, the exact
+global delta-metric aggregation (partial sums combined across leaves), and
+the storage-vs-dequant emission; the per-leaf math is delegated to a
+:class:`Quantizer` resolved from the method registry:
+
+  ``"absmax"``        AbsMax baseline (search collapsed to alpha = 1)
+  ``"daq"``           paper Alg. 1 scale search, metric from ``qcfg.metric``
+  ``"daq-per-block"`` beyond-paper independent alpha per block/channel
+  ``"smoothquant"``   activation-aware equalization, fixed alpha = 0.5
+  ``"awq"``           activation-aware equalization, alpha grid by output MSE
+
+Calibration-based methods receive activation statistics through the
+``calibrate`` hook (pass ``model=``/``spec=`` or a precomputed ``calib=``
+list); data-free methods ignore those arguments.  The legacy
+``repro.core.daq.quantize_tree`` / ``absmax_tree`` are deprecated shims over
+this function.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.core import metrics as M
+from repro.core.policy import path_str, should_quantize
+from repro.core.search import SearchResult
+from repro.quant_runtime.qparams import QuantizedTensor
+from repro.quantize.registry import get_method
+
+_PARTIAL_KEYS = ("sq_err", "n_sign_match", "dot", "dp_sq", "dq_sq", "count")
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf context + method protocol
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LeafContext:
+    """Everything a :class:`Quantizer` sees for one eligible leaf."""
+    name: str                    # joined key path, e.g. "stack/L0/attn/wq"
+    w_post: jnp.ndarray          # post-trained weight (>= 2-D)
+    w_base: jnp.ndarray          # base weight, same shape
+    qcfg: QuantConfig            # method-resolved config
+
+
+class Quantizer:
+    """Base class / protocol for registered quantization methods.
+
+    Subclasses implement ``prepare`` (per-leaf) and may override:
+
+      * ``resolve_config(qcfg)`` — normalize the config before the walk
+        (e.g. AbsMax collapses every search knob);
+      * ``calibrate(model, params, spec, n_batches=...)`` — produce
+        activation statistics for calibration-based methods;
+      * ``set_calibration(calib)`` — install (possibly precomputed) stats.
+    """
+
+    name: str = ""
+    requires_calibration: bool = False
+
+    def resolve_config(self, qcfg: QuantConfig) -> QuantConfig:
+        return qcfg
+
+    def calibrate(self, model, params, spec, *, n_batches: int = 2) -> Any:
+        return None
+
+    def set_calibration(self, calib: Any) -> None:
+        pass
+
+    def prepare(self, ctx: LeafContext) -> SearchResult:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class QuantReport:
+    per_leaf: dict[str, dict] = field(default_factory=dict)
+    global_chosen: dict[str, float] = field(default_factory=dict)
+    global_default: dict[str, float] = field(default_factory=dict)
+    n_quantized: int = 0
+    n_skipped: int = 0
+    quantized_bytes: int = 0
+    original_bytes: int = 0
+    method: str = ""
+
+    def summary(self) -> str:
+        g, d = self.global_chosen, self.global_default
+        lines = [
+            f"quantized {self.n_quantized} tensors ({self.n_skipped} skipped), "
+            f"{self.original_bytes / 1e6:.1f} MB -> {self.quantized_bytes / 1e6:.1f} MB",
+            f"  delta_l2   : {d.get('delta_l2', 0):.4g} -> {g.get('delta_l2', 0):.4g}",
+            f"  sign_rate  : {d.get('sign_rate', 0):.4f} -> {g.get('sign_rate', 0):.4f}",
+            f"  cosine     : {d.get('cosine', 0):.4f} -> {g.get('cosine', 0):.4f}",
+            f"  mse        : {d.get('mse', 0):.4g} -> {g.get('mse', 0):.4g}",
+        ]
+        if self.method:
+            lines.insert(0, f"method: {self.method}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def _scalar_sum(x) -> float:
+    return float(jnp.sum(x))
+
+
+def _mean_metric(d: dict, m: str) -> float:
+    """Per-leaf metric: mean over stacked layers when the leaf was vmapped."""
+    return float(jnp.mean(d[m]))
+
+
+def quantize(params_post: Any, params_base: Any = None,
+             qcfg: QuantConfig | None = None, *, mode: str = "dequant",
+             out_dtype: str = "float32", method: str | None = None,
+             model=None, spec=None, calib: Any = None,
+             calib_batches: int = 2) -> tuple[Any, QuantReport]:
+    """Quantize every eligible leaf of ``params_post``.
+
+    Args:
+      params_post: pytree of post-trained weights.
+      params_base: matching pytree of base weights for the delta-aware
+        objectives; ``None`` uses ``params_post`` itself (zero delta —
+        reconstruction-only regime, delta metrics degenerate).
+      qcfg: :class:`QuantConfig`; ``qcfg.method`` selects the algorithm.
+      mode: ``"dequant"`` returns float weights (evaluation / benchmarks);
+        ``"storage"`` returns :class:`QuantizedTensor` nodes (serving).
+      out_dtype: dtype of emitted weights (dequant) / dequantization target
+        (storage).
+      method: registry-name override of ``qcfg.method``.
+      model, spec: forwarded to the method's ``calibrate`` hook when the
+        method requires calibration and no ``calib`` was given.
+      calib: precomputed calibration statistics (skips ``calibrate``).
+      calib_batches: batches for the ``calibrate`` hook.
+
+    Returns:
+      ``(quantized_tree, QuantReport)`` — the report carries per-leaf alphas
+      and exact global delta metrics at both the chosen and default scales.
+    """
+    if qcfg is None:
+        qcfg = QuantConfig()
+    if mode not in ("dequant", "storage"):
+        raise ValueError(f"mode must be 'dequant' or 'storage', got {mode!r}")
+    name = method or qcfg.method
+    quantizer: Quantizer = get_method(name)()
+    qcfg = quantizer.resolve_config(qcfg)
+    if params_base is None:
+        params_base = params_post
+
+    if quantizer.requires_calibration:
+        if calib is None and (model is None) != (spec is None):
+            raise ValueError(
+                f"method {name!r} requires calibration: pass BOTH model= "
+                "and spec= (or a precomputed calib= list)")
+        if calib is None and model is not None:
+            calib = quantizer.calibrate(model, params_post, spec,
+                                        n_batches=calib_batches)
+        quantizer.set_calibration(calib)
+
+    report = QuantReport(method=name)
+    post_leaves, treedef = jax.tree_util.tree_flatten_with_path(params_post)
+    base_leaves = jax.tree_util.tree_leaves(params_base)
+    if len(post_leaves) != len(base_leaves):
+        raise ValueError("post/base parameter trees differ in structure")
+
+    agg_c = {k: 0.0 for k in _PARTIAL_KEYS}
+    agg_d = {k: 0.0 for k in _PARTIAL_KEYS}
+
+    out_leaves = []
+    for (path, w_post), w_base in zip(post_leaves, base_leaves):
+        leaf_name = path_str(path)
+        if not should_quantize(leaf_name, w_post, qcfg.skip_patterns):
+            report.n_skipped += 1
+            out_leaves.append(w_post)
+            continue
+        res = quantizer.prepare(LeafContext(leaf_name, w_post, w_base, qcfg))
+        report.n_quantized += 1
+        report.original_bytes += w_post.size * w_post.dtype.itemsize
+        for k in _PARTIAL_KEYS:
+            agg_c[k] += _scalar_sum(res.chosen[k])
+            agg_d[k] += _scalar_sum(res.default[k])
+        report.per_leaf[leaf_name] = {
+            "alpha": jax.device_get(res.alpha),
+            "chosen": {m: _mean_metric(res.chosen, m) for m in
+                       ("mse", "sign_rate", "cosine", "delta_l2")},
+            "default": {m: _mean_metric(res.default, m) for m in
+                        ("mse", "sign_rate", "cosine", "delta_l2")},
+            "shape": tuple(w_post.shape),
+        }
+        if mode == "storage":
+            qt = QuantizedTensor(data=res.w_q, scale=res.scale, fmt=qcfg.fmt,
+                                 granularity=qcfg.granularity,
+                                 block_size=qcfg.block_size,
+                                 out_dtype=out_dtype, eq_scale=res.eq_scale)
+            report.quantized_bytes += qt.nbytes()
+            out_leaves.append(qt)
+        else:
+            from repro.core.formats import get_format
+            nbytes = (w_post.size * get_format(qcfg.fmt).bits // 8
+                      + res.scale.size * 4)
+            if res.eq_scale is not None:
+                nbytes += res.eq_scale.size * 4
+            report.quantized_bytes += nbytes
+            out_leaves.append(res.w_dq.astype(jnp.dtype(out_dtype)))
+
+    agg_cj = {k: jnp.asarray(v) for k, v in agg_c.items()}
+    agg_dj = {k: jnp.asarray(v) for k, v in agg_d.items()}
+    report.global_chosen = {k: float(v) for k, v in
+                            M.metrics_from_partials(agg_cj).items()}
+    report.global_default = {k: float(v) for k, v in
+                             M.metrics_from_partials(agg_dj).items()}
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), report

@@ -1,0 +1,41 @@
+"""String-keyed registry of quantization methods.
+
+Every quantization algorithm in the repo — DAQ's delta-aware scale search,
+the AbsMax baseline, and the calibration-based SmoothQuant / AWQ
+equalization baselines — registers here under a short name.  The single
+entry point :func:`repro.quantize.quantize` resolves ``QuantConfig.method``
+(or an explicit ``method=`` override) through this table, so adding a new
+format/algorithm is one ``@register("name")`` class, not another fork of the
+tree-walk loop.
+"""
+from __future__ import annotations
+
+_REGISTRY: dict[str, type] = {}
+
+# The built-in method modules (repro.quantize.daq / .equalize) register
+# themselves when the package __init__ imports them; they cannot be
+# imported here because they subclass Quantizer from repro.quantize.api,
+# which imports this registry — that would be a cycle.  Importing any part
+# of the package runs __init__ first, so lookups always see the builtins.
+
+
+def register(name: str):
+    """Class decorator: register a :class:`Quantizer` under ``name``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_method(name: str) -> type:
+    """Resolve a method name to its :class:`Quantizer` class."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown quantization method {name!r}; "
+                       f"available: {sorted(_REGISTRY)}") from None
+
+
+def available_methods() -> list[str]:
+    return sorted(_REGISTRY)
