@@ -1,0 +1,105 @@
+"""Serving bench: legacy host-scheduled loop vs device-resident engine.
+
+Races the two continuous batchers on identical greedy workloads (reduced
+arch, CPU-scale) and reports tok/s plus host syncs per generated token —
+the metric the engine exists to crush (the old loop blocks once per slot
+per token; the engine once per K decode steps).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--gen 24 --k-steps 8 ...]
+  PYTHONPATH=src python -m benchmarks.run serve     # same, CSV + JSON
+
+Writes ``BENCH_serve.json`` and prints ``benchmarks.common.emit`` CSV rows.
+Each loop is run twice; the second (warm-jit) run is timed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_arch, reduced
+from repro.data import LanguageSpec, sample_batch
+from repro.engine import Engine, serve_host_loop
+from repro.models import build_model
+
+
+def _timed(fn):
+    fn()                      # warm the jit caches
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 2,
+        prompt_len: int = 16, gen: int = 24, k_steps: int = 8,
+        out_path: str = "BENCH_serve.json") -> dict:
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = LanguageSpec(vocab=cfg.vocab_size)
+    prompts = [sample_batch(jax.random.PRNGKey(i), spec, 1, prompt_len)[0]
+               for i in range(requests)]
+    cache_len = prompt_len + gen + 9
+
+    (old_outs, old_stats), old_dt = _timed(lambda: serve_host_loop(
+        model, params, prompts, batch=batch, gen_tokens=gen,
+        cache_len=cache_len, return_stats=True))
+
+    eng = Engine(model, params, slots=batch, cache_len=cache_len,
+                 k_steps=k_steps)
+    (eng_outs, eng_stats), eng_dt = _timed(lambda: eng.serve(
+        prompts, gen_tokens=gen, return_stats=True))
+
+    if eng_outs != old_outs:
+        print("bench_serve: WARNING: engine outputs differ from the host "
+              "loop (greedy parity violated)", flush=True)
+
+    def row(name, dt, stats):
+        tok = stats["tokens"]
+        return {"tok_per_s": tok / dt, "wall_s": dt, "tokens": tok,
+                "host_syncs": stats["host_syncs"],
+                "host_syncs_per_token": stats["host_syncs"] / tok,
+                "prefill_calls": stats["prefill_calls"],
+                "dispatches": stats["dispatches"]}
+
+    result = {
+        "workload": {"arch": arch, "requests": requests, "batch": batch,
+                     "prompt_len": prompt_len, "gen": gen,
+                     "k_steps": k_steps, "greedy_parity":
+                     eng_outs == old_outs},
+        "old": row("old", old_dt, old_stats),
+        "engine": row("engine", eng_dt, eng_stats),
+    }
+    result["speedup"] = (result["engine"]["tok_per_s"]
+                         / result["old"]["tok_per_s"])
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    emit("serve.old_host_loop", old_dt * 1e6,
+         f"tok_per_s={result['old']['tok_per_s']:.1f};"
+         f"syncs_per_tok={result['old']['host_syncs_per_token']:.3f}")
+    emit("serve.engine", eng_dt * 1e6,
+         f"tok_per_s={result['engine']['tok_per_s']:.1f};"
+         f"syncs_per_tok={result['engine']['host_syncs_per_token']:.3f}")
+    emit("serve.speedup", 0, f"x={result['speedup']:.2f}")
+    return result
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--k-steps", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    run(args.arch, args.requests, args.batch, args.prompt_len, args.gen,
+        args.k_steps, args.out)
+
+
+if __name__ == "__main__":
+    main()

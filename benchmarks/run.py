@@ -57,7 +57,8 @@ def decode_throughput():
     import jax.numpy as jnp
     from benchmarks.common import emit, time_call
     from repro.configs import get_arch, reduced
-    from repro.launch.steps import make_serve_step
+    from repro.engine import SamplingParams, make_decode_dispatch
+    from repro.engine.scheduler import init_slot_state
     from repro.models import build_model
 
     cfg = reduced(get_arch("glm4-9b"))
@@ -65,11 +66,21 @@ def decode_throughput():
     params = model.init(jax.random.PRNGKey(0))
     cache = model.init_cache(8, 256)
     cache["lengths"] = jnp.full((8,), 128, jnp.int32)
-    toks = jnp.ones((8, 1), jnp.int32)
-    step = jax.jit(make_serve_step(model))
-    us = time_call(lambda: step(params, toks, cache)[0])
-    emit("serve.decode_glm4smoke_b8_cache256", us,
-         f"tok_per_s={8/(us/1e6):.0f}")
+    state = init_slot_state(8)
+    state["active"] = jnp.ones((8,), bool)
+    state["remaining"] = jnp.full((8,), 10**6, jnp.int32)
+    K = 8
+    dispatch = jax.jit(make_decode_dispatch(model, SamplingParams(), K))
+    key = jax.random.PRNGKey(0)
+    us = time_call(lambda: dispatch(params, state, cache, key)[2])
+    emit(f"serve.decode_glm4smoke_b8_cache256_k{K}", us,
+         f"tok_per_s={8*K/(us/1e6):.0f}")
+
+
+def serve_bench():
+    """Legacy host loop vs device-resident engine (BENCH_serve.json)."""
+    from benchmarks import bench_serve
+    bench_serve.main([])
 
 
 def roofline():
@@ -87,6 +98,7 @@ BENCHES = {
     "kernels": kernels,
     "train": train_throughput,
     "decode": decode_throughput,
+    "serve": serve_bench,
     "roofline": roofline,
 }
 

@@ -1,10 +1,12 @@
-"""Serve a DAQ-quantized model with the slot-based continuous batcher.
+"""Serve a DAQ-quantized model through the device-resident engine.
 
   PYTHONPATH=src python examples/serve_quantized.py
 
 Compares dense-bf16 serving vs fp8 DAQ-quantized serving on the same
 requests: same model code, QuantizedTensor leaves (quant_runtime/qlinear);
-on TPU the fused dequant-matmul kernel takes over via USE_KERNELS.
+on TPU the fused dequant-matmul kernel takes over via USE_KERNELS.  Both
+runs go through ``repro.engine.Engine`` — slot scheduling lives on device
+and the host syncs once per ``k_steps`` decode steps.
 """
 import time
 
@@ -13,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs import QuantConfig, get_arch, reduced
 from repro.data import LanguageSpec, sample_batch
-from repro.launch.serve import serve
+from repro.engine import Engine
 from repro.models import build_model
 from repro.quantize import quantize
 
@@ -37,11 +39,13 @@ def main():
                for i in range(6)]
 
     for name, p in (("bf16", params), ("fp8-DAQ", qparams)):
+        eng = Engine(model, p, slots=2, cache_len=40, k_steps=8)
         t0 = time.time()
-        outs = serve(model, p, prompts, batch=2, gen_tokens=8, cache_len=40)
+        outs, stats = eng.serve(prompts, gen_tokens=8, return_stats=True)
         dt = time.time() - t0
         n = sum(len(o) for o in outs)
-        print(f"{name:8s}: {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s); "
+        print(f"{name:8s}: {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s, "
+              f"{stats['host_syncs']} host syncs); "
               f"first request -> {outs[0]}")
 
 

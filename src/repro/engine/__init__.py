@@ -1,0 +1,25 @@
+"""Device-resident serving engine (continuous batching, batched prefill,
+real sampling, opt-in sharded serving).
+
+    from repro.engine import Engine, EngineConfig, SamplingParams
+
+    eng = Engine(model, params, slots=8, cache_len=512, k_steps=8,
+                 sampling=SamplingParams(greedy=False, temperature=0.8,
+                                         top_k=40))
+    outputs = eng.serve(requests, gen_tokens=64)
+
+See engine.py (host/device split), scheduler.py (slot state + K-step
+dispatch), sampler.py (greedy / temperature / top-k), legacy.py (the old
+host-driven loop, kept as benchmark baseline).
+"""
+from repro.engine.engine import Engine, EngineConfig
+from repro.engine.legacy import serve_host_loop, single_slot_prefill
+from repro.engine.sampler import SamplingParams, sample
+from repro.engine.scheduler import (init_slot_state, make_decode_dispatch,
+                                    make_decode_step)
+
+__all__ = [
+    "Engine", "EngineConfig", "SamplingParams", "sample",
+    "init_slot_state", "make_decode_dispatch", "make_decode_step",
+    "serve_host_loop", "single_slot_prefill",
+]

@@ -1,0 +1,243 @@
+"""Device-resident serving engine: continuous batching with on-device
+scheduling, batched multi-slot prefill, real sampling, opt-in sharding.
+
+The host keeps only what it must (the request queue and a mirror of each
+slot's budget, maintained from the dispatch results it already fetched —
+no extra syncs); everything per-token lives on device:
+
+* **decode** — one jitted dispatch runs ``k_steps`` decode steps under
+  ``lax.scan`` (scheduler.make_decode_dispatch); the host syncs once per
+  dispatch to drain the emitted-token grid.
+* **prefill** — all free slots' pending prompts go through batched
+  ``model.prefill`` calls (a single right-padded call when the model
+  supports it, else one call per distinct prompt length) and their cache
+  rows are scattered into the live cache in one jitted update.  When the
+  whole pool is being (re)filled in one equal-length batch the returned
+  cache simply *replaces* the live one — the scatter-free path.
+* **sampling** — greedy / temperature / top-k via engine.sampler with a
+  per-step threaded PRNG key (the old host loop's ``greedy=False`` was
+  silently argmax).
+* **sharding** — pass ``mesh=`` to place params with
+  ``launch.sharding.params_shardings`` (quantized ``wq/data`` / ``wq/scale``
+  leaves inherit the dense weight's layout by tree path) and the decode
+  cache with ``cache_shardings``; all jitted steps then run GSPMD-partitioned.
+
+Right-padded prefill is only exact when a row's hidden states cannot depend
+on positions after it or on other tokens' presence: pure causal attention
+qualifies; SWA ring caches (slot = position % window would index pad
+positions), Mamba state accumulation, and capacity-routed MoE (pad tokens
+compete for per-expert capacity and can displace real tokens) do not —
+those configs fall back to equal-length grouping automatically.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.sampler import SamplingParams, sample
+from repro.engine.scheduler import init_slot_state, make_decode_dispatch
+from repro.models.lm import Model
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 2          # size of the continuous-batching pool
+    cache_len: int = 256    # decode cache capacity per slot
+    k_steps: int = 8        # decode steps per dispatch (1 host sync each)
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    seed: int = 0
+
+
+class Engine:
+    """Continuous-batching serving engine over a built :class:`Model`."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig | None = None,
+                 *, mesh=None, **kw):
+        if cfg is None:
+            cfg = EngineConfig(**kw)
+        elif kw:
+            raise TypeError("pass either cfg= or keyword fields, not both")
+        if model.cfg.family in ("vlm", "encdec"):
+            raise NotImplementedError(
+                "Engine drives LM-style models; vlm/encdec need modality "
+                "inputs (see examples/)")
+        self.model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        # right-padded prefill is exact only for pure-causal-attention
+        # stacks with non-ring caches AND no cross-token coupling: MoE is
+        # excluded because pad tokens join capacity-limited routing and can
+        # displace real tokens' expert assignments (see module docstring)
+        mcfg = model.cfg
+        self._can_pad = (mcfg.family == "dense"
+                         and not mcfg.sliding_window)
+        self.params = self._place_params(params) if mesh is not None else params
+
+        sp, K = cfg.sampling, cfg.k_steps
+        if K < 1:
+            raise ValueError(f"k_steps must be >= 1, got {K}")
+        self._dispatch = jax.jit(make_decode_dispatch(model, sp, K),
+                                 donate_argnums=(1, 2))
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
+        self._prefill_full = jax.jit(
+            lambda p, toks: model.prefill(p, {"tokens": toks},
+                                          cache_len=cfg.cache_len))
+        self._prefill_padded = jax.jit(
+            lambda p, toks, lens: model.prefill(p, {"tokens": toks},
+                                                cache_len=cfg.cache_len,
+                                                lengths=lens))
+
+    # -- sharded placement --------------------------------------------------
+
+    def _place_params(self, params):
+        from repro.launch.sharding import params_shardings
+        shard = params_shardings(jax.eval_shape(lambda: params),
+                                 self.model.cfg, self.mesh)
+        return jax.device_put(params, shard)
+
+    def _place_cache(self, cache):
+        from repro.launch.sharding import cache_shardings
+        shard = cache_shardings(jax.eval_shape(lambda: cache),
+                                self.model.cfg, self.mesh)
+        return jax.device_put(cache, shard)
+
+    # -- batched prefill + single-scatter admission -------------------------
+
+    @staticmethod
+    def _scatter_impl(cache, state, part_cache, slots, first, remaining0):
+        """Scatter ``part_cache`` rows (batch axis 1 under the period axis)
+        into the live cache at ``slots`` and arm the slot state — one jitted
+        update for the whole admitted group."""
+        def sc(full, part):
+            return full.at[:, slots].set(part.astype(full.dtype))
+
+        new = dict(cache)
+        new["stack"] = jax.tree.map(sc, cache["stack"], part_cache["stack"])
+        if "prefix" in cache:
+            new["prefix"] = jax.tree.map(sc, cache["prefix"],
+                                         part_cache["prefix"])
+        new["lengths"] = cache["lengths"].at[slots].set(
+            part_cache["lengths"])
+        state = {
+            "cur": state["cur"].at[slots, 0].set(first),
+            "active": state["active"].at[slots].set(remaining0 > 0),
+            "remaining": state["remaining"].at[slots].set(remaining0),
+        }
+        return new, state
+
+    def _admit(self, cache, state, free_slots, prompts, gen_tokens, key):
+        """Prefill ``prompts`` into ``free_slots``.  Returns (cache, state,
+        first_tokens host list, n_prefill_calls)."""
+        B = self.cfg.slots
+        lens = [int(p.shape[0]) for p in prompts]
+        if len(set(lens)) == 1:
+            groups = [list(range(len(prompts)))]
+        elif self._can_pad:
+            groups = [list(range(len(prompts)))]
+        else:  # ring/SSM caches: exact per-length batches
+            by_len: dict[int, list[int]] = {}
+            for i, L in enumerate(lens):
+                by_len.setdefault(L, []).append(i)
+            groups = list(by_len.values())
+
+        firsts: dict[int, int] = {}
+        rem0 = jnp.int32(gen_tokens - 1)
+        for g in groups:
+            key, sub = jax.random.split(key)
+            Lmax = max(lens[i] for i in g)
+            toks = jnp.stack([
+                jnp.pad(prompts[i], (0, Lmax - lens[i])) for i in g
+            ]).astype(jnp.int32)
+            if all(lens[i] == Lmax for i in g):
+                logits, part = self._prefill_full(self.params, toks)
+            else:
+                glens = jnp.asarray([lens[i] for i in g], jnp.int32)
+                logits, part = self._prefill_padded(self.params, toks, glens)
+            first = sample(logits, sub, self.cfg.sampling)
+            g_slots = [free_slots[i] for i in g]
+            if len(g) == B and g_slots == list(range(B)):
+                # scatter-free: the prefill result IS the new cache
+                if self.mesh is not None:
+                    part = self._place_cache(part)
+                cache = part
+                state = {"cur": first[:, None].astype(jnp.int32),
+                         "active": jnp.broadcast_to(rem0 > 0, (B,)),
+                         "remaining": jnp.broadcast_to(rem0, (B,))}
+            else:
+                cache, state = self._scatter(
+                    cache, state, part, jnp.asarray(g_slots, jnp.int32),
+                    first, rem0)
+            for i, t in zip(g, jax.device_get(first)):
+                firsts[i] = int(t)
+        return cache, state, [firsts[i] for i in range(len(prompts))], \
+            len(groups)
+
+    # -- serve --------------------------------------------------------------
+
+    def serve(self, requests, *, gen_tokens: int, seed: int | None = None,
+              return_stats: bool = False):
+        """Serve ``requests`` (1-D token arrays); each gets ``gen_tokens``
+        generated tokens.  Returns outputs in request order (and a stats
+        dict when ``return_stats``)."""
+        cfg, model = self.cfg, self.model
+        B, K = cfg.slots, cfg.k_steps
+        requests = [jnp.asarray(r, jnp.int32).reshape(-1) for r in requests]
+        stats = {"host_syncs": 0, "dispatches": 0, "prefill_calls": 0,
+                 "decode_steps": 0, "tokens": 0}
+        outputs: dict[int, list[int]] = {}
+        if gen_tokens < 1 or not requests:
+            return ([], stats) if return_stats else []
+
+        cache = model.init_cache(B, cfg.cache_len)
+        state = init_slot_state(B)
+        if self.mesh is not None:
+            cache = self._place_cache(cache)
+        key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+        queue = deque(range(len(requests)))
+        slot_rid = [-1] * B     # request id per slot (host mirror)
+        slot_rem = [0] * B      # remaining budget     (host mirror)
+
+        while queue or any(r >= 0 for r in slot_rid):
+            free = [s for s in range(B) if slot_rid[s] < 0]
+            if queue and free:
+                take = min(len(free), len(queue))
+                rids = [queue.popleft() for _ in range(take)]
+                key, sub = jax.random.split(key)
+                cache, state, first, ncalls = self._admit(
+                    cache, state, free[:take],
+                    [requests[r] for r in rids], gen_tokens, sub)
+                stats["prefill_calls"] += ncalls
+                stats["host_syncs"] += ncalls
+                stats["tokens"] += take
+                for s, r, t in zip(free, rids, first):
+                    outputs[r] = [t]
+                    slot_rid[s], slot_rem[s] = r, gen_tokens - 1
+                for s in free[:take]:   # gen_tokens == 1 finishes now
+                    if slot_rem[s] <= 0:
+                        slot_rid[s] = -1
+            if not any(r >= 0 for r in slot_rid):
+                continue
+
+            key, sub = jax.random.split(key)
+            state, cache, toks, emitted = self._dispatch(
+                self.params, state, cache, sub)
+            toks_h, em_h = jax.device_get((toks, emitted))
+            stats["host_syncs"] += 1
+            stats["dispatches"] += 1
+            stats["decode_steps"] += K
+            for s in range(B):
+                r = slot_rid[s]
+                if r < 0:
+                    continue
+                row = [int(t) for t in toks_h[s][em_h[s]]]
+                outputs[r].extend(row)
+                stats["tokens"] += len(row)
+                slot_rem[s] -= len(row)
+                if slot_rem[s] <= 0:
+                    slot_rid[s] = -1
+
+        outs = [outputs[i] for i in sorted(outputs)]
+        return (outs, stats) if return_stats else outs

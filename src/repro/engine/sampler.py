@@ -1,0 +1,50 @@
+"""Token samplers for the serving engine.
+
+One jit-safe entry point :func:`sample` maps ``logits [B, V]`` to next-token
+ids ``[B]`` under a static :class:`SamplingParams`:
+
+* **greedy** — argmax (bit-identical to the pre-engine host loop);
+* **temperature** — softmax sampling at ``temperature`` via
+  ``jax.random.categorical``;
+* **top-k** — logits outside the per-row top-k are masked to -inf before the
+  categorical draw.
+
+``SamplingParams`` is a frozen (hashable) dataclass so decode dispatches can
+close over it and stay a single jit cache entry; the PRNG key is threaded by
+the caller (the engine splits one key per decode step inside its scan).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0          # 0 = no truncation
+
+    def __post_init__(self):
+        if not self.greedy and self.temperature <= 0:
+            raise ValueError("temperature must be > 0 for sampling; "
+                             "use greedy=True for argmax decoding")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+def sample(logits: jnp.ndarray, key, sp: SamplingParams) -> jnp.ndarray:
+    """logits [..., V] -> token ids [...] (int32).  jit- and scan-safe."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l32 = logits.astype(jnp.float32)
+    V = l32.shape[-1]
+    if 0 < sp.top_k < V:
+        kth = jax.lax.top_k(l32, sp.top_k)[0][..., -1:]
+        l32 = jnp.where(l32 < kth, NEG_INF, l32)
+    l32 = l32 / sp.temperature
+    return jax.random.categorical(key, l32, axis=-1).astype(jnp.int32)

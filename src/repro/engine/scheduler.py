@@ -1,0 +1,78 @@
+"""Device-resident slot scheduler: state layout + multi-token decode dispatch.
+
+The continuous batcher's per-slot state (``cur`` token, ``active`` flag,
+``remaining`` budget) lives in jnp arrays and is updated *inside* the jitted
+decode dispatch, so the host never round-trips per token.  One dispatch runs
+``k_steps`` decode steps under ``lax.scan`` and returns the emitted token
+grid ``[B, K]`` plus the emission mask — the host syncs once per K steps
+instead of once per slot per token.
+
+Semantics match the pre-engine host loop exactly: every slot decodes every
+step (finished slots produce masked garbage that is overwritten at the next
+prefill, just as the old loop kept feeding finished slots), ``remaining`` is
+decremented only while a slot is active, and a slot deactivates when its
+budget reaches zero.  Under greedy sampling the emitted tokens are therefore
+token-identical to the old loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.sampler import SamplingParams, sample
+from repro.models.lm import Model
+
+
+def init_slot_state(n_slots: int) -> dict:
+    """Zeroed device-side slot state for a fresh pool of ``n_slots``."""
+    return {
+        "cur": jnp.zeros((n_slots, 1), jnp.int32),      # last sampled token
+        "active": jnp.zeros((n_slots,), bool),          # slot serving a req?
+        "remaining": jnp.zeros((n_slots,), jnp.int32),  # decode budget left
+    }
+
+
+def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int):
+    """Build the jitted K-step decode dispatch.
+
+    ``dispatch(params, state, cache, key)`` -> (state, cache, tokens [B, K],
+    emitted [B, K] bool).  ``emitted[b, j]`` marks tokens produced while slot
+    ``b`` was still active; it is a contiguous prefix per row, so the host
+    can append ``tokens[b, emitted[b]]`` verbatim.
+    """
+    def dispatch(params, state: dict, cache: dict, key):
+        def body(carry, step_key):
+            st, cache = carry
+            logits, cache = model.decode_step(params, st["cur"], cache)
+            nxt = sample(logits, step_key, sp)
+            emitted = st["active"]
+            remaining = st["remaining"] - emitted.astype(jnp.int32)
+            st = {"cur": nxt[:, None],
+                  "active": emitted & (remaining > 0),
+                  "remaining": remaining}
+            return (st, cache), (nxt, emitted)
+
+        keys = jax.random.split(key, k_steps)
+        (state, cache), (toks, emitted) = jax.lax.scan(
+            body, (state, cache), keys)
+        return state, cache, toks.T, emitted.T
+
+    return dispatch
+
+
+def make_decode_step(model: Model, sp: SamplingParams | None = None):
+    """One decode step + sampling: (params, tokens, cache, key=) ->
+    (next_tok [B, 1], logits [B, V], new cache).
+
+    This is the single-step form of the dispatch; ``launch.steps
+    .make_serve_step`` is a deprecated greedy alias of it.
+    """
+    sp = sp or SamplingParams()
+
+    def step(params, tokens, cache, key=None):
+        logits, cache = model.decode_step(params, tokens, cache)
+        k = key if key is not None else jax.random.PRNGKey(0)
+        nxt = sample(logits, k, sp)[:, None]
+        return nxt, logits, cache
+
+    return step

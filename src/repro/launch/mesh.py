@@ -16,14 +16,19 @@ import jax
 import numpy as np
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto(n: int) -> dict:
+    """axis_types kwargs when this jax exposes them (explicit-sharding era);
+    older jax (< 0.5) predates AxisType and defaults every axis to Auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto(len(axes)))
 
 
 def make_host_mesh(*, model: int = 1):
@@ -31,7 +36,7 @@ def make_host_mesh(*, model: int = 1):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+                         **_auto(2))
 
 
 def mesh_info(mesh) -> dict:

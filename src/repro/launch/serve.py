@@ -1,13 +1,12 @@
-"""Batched serving driver: prefill + decode with (optionally fp8) weights.
+"""Serving CLI: a thin driver over the device-resident engine.
 
-A deliberately small but real serving loop:
+All serving mechanics live in :mod:`repro.engine` — slot scheduling on
+device, K-step decode dispatch (one host sync per K tokens), batched
+multi-slot prefill with a single jitted cache scatter, greedy / temperature
+/ top-k sampling, and opt-in sharded serving over a host mesh.  This module
+only parses flags, builds (and optionally quantizes) the model, and calls
+``Engine.serve``.
 
-* **Slot-based continuous batching (lite)** — a fixed pool of B slots, each
-  holding one request's state (length, remaining tokens).  When a request
-  finishes, the next queued request is prefilled into the freed slot while
-  the other slots keep decoding — the standard continuous-batching pattern
-  reduced to slot granularity.  Per-slot lengths ride the cache's
-  ``lengths`` vector, so mixed-progress batches are exact.
 * **Quantized weights** — pass ``--daq`` to serve fp8 weights quantized
   through ``repro.quantize`` (method selectable via ``--method``): the
   parameter tree's matmul leaves become QuantizedTensor nodes and the same
@@ -16,11 +15,16 @@ A deliberately small but real serving loop:
   Delta-aware methods want a real base model — point ``--base-ckpt`` at a
   checkpoint directory (e.g. ``experiments/study/base``); without it a
   jittered copy stands in (with a loud warning — demo only).
+* **Sharded serving** — ``--mesh N`` builds a host mesh with model-parallel
+  size N (``launch/mesh.make_host_mesh``) and places params + cache with
+  the ``launch/sharding`` specs; quantized ``wq/data`` / ``wq/scale``
+  leaves inherit the dense weight's layout.
 
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
-      --requests 6 --batch 2 --prompt-len 16 --gen 8 \
-      [--daq [--method daq] [--base-ckpt experiments/study/base]]
+      --requests 6 --batch 2 --prompt-len 16 --gen 8 --k-steps 8 \
+      [--daq [--method daq] [--base-ckpt experiments/study/base]] \
+      [--temperature 0.8 --top-k 40] [--mesh 1]
 """
 from __future__ import annotations
 
@@ -32,74 +36,24 @@ import jax.numpy as jnp
 
 from repro.configs import QuantConfig, get_arch, reduced as reduce_cfg
 from repro.data import LanguageSpec, sample_batch
-from repro.launch.steps import make_serve_step
+from repro.engine import Engine, SamplingParams
 from repro.models import build_model
 
 
-def single_slot_prefill(model, params, cache, tokens_row, slot: int,
-                        cache_len: int):
-    """Prefill one request into ``slot`` of a live batch cache.
-
-    Runs a batch-1 prefill and scatters the resulting per-layer cache rows
-    into the slot (the per-slot path of continuous batching)."""
-    logits, one_cache = model.prefill(
-        params, {"tokens": tokens_row[None]}, cache_len=cache_len)
-
-    # scatter every [n_periods, 1, ...] leaf into [n_periods, B, ...] slot
-    def scatter(full_leaf, one_leaf):
-        return full_leaf.at[:, slot].set(one_leaf[:, 0].astype(full_leaf.dtype))
-
-    new_stack = jax.tree.map(scatter, cache["stack"], one_cache["stack"])
-    new_cache = dict(cache)
-    new_cache["stack"] = new_stack
-    if "prefix" in cache:
-        new_cache["prefix"] = jax.tree.map(scatter, cache["prefix"],
-                                           one_cache["prefix"])
-    new_cache["lengths"] = cache["lengths"].at[slot].set(
-        one_cache["lengths"][0])
-    return logits[0], new_cache
-
-
 def serve(model, params, requests: list[jnp.ndarray], *, batch: int,
-          gen_tokens: int, cache_len: int, greedy: bool = True) -> list[list[int]]:
-    """Serve ``requests`` (token arrays) with a B-slot continuous batcher."""
-    cfg = model.cfg
-    serve_step = jax.jit(make_serve_step(model), donate_argnums=2)
-    cache = model.init_cache(batch, cache_len)
-    cur = jnp.zeros((batch, 1), jnp.int32)
-    active = [-1] * batch                 # request id per slot
-    remaining = [0] * batch
-    outputs: dict[int, list[int]] = {}
-    queue = list(range(len(requests)))
+          gen_tokens: int, cache_len: int, greedy: bool = True,
+          sampling: SamplingParams | None = None, k_steps: int = 8,
+          mesh=None, seed: int = 0) -> list[list[int]]:
+    """Compat wrapper: serve ``requests`` through a fresh :class:`Engine`.
 
-    def fill_slot(slot, cache, cur):
-        rid = queue.pop(0)
-        logits, cache = single_slot_prefill(model, params, cache,
-                                            requests[rid], slot, cache_len)
-        nxt = int(jnp.argmax(logits)) if greedy else int(logits.argmax())
-        cur = cur.at[slot, 0].set(nxt)
-        outputs[rid] = [nxt]
-        active[slot] = rid
-        remaining[slot] = gen_tokens - 1
-        return cache, cur
-
-    for slot in range(batch):
-        if queue:
-            cache, cur = fill_slot(slot, cache, cur)
-
-    while any(a >= 0 for a in active):
-        cur, logits, cache = serve_step(params, cur, cache)
-        for slot in range(batch):
-            rid = active[slot]
-            if rid < 0:
-                continue
-            outputs[rid].append(int(cur[slot, 0]))
-            remaining[slot] -= 1
-            if remaining[slot] <= 0:
-                active[slot] = -1
-                if queue:
-                    cache, cur = fill_slot(slot, cache, cur)
-    return [outputs[i] for i in sorted(outputs)]
+    Kept so existing callers (tests, examples) of the old host-loop API keep
+    working; new code should construct an ``Engine`` directly and reuse it
+    across calls.
+    """
+    sp = sampling or SamplingParams(greedy=greedy)
+    eng = Engine(model, params, slots=batch, cache_len=cache_len,
+                 k_steps=k_steps, sampling=sp, mesh=mesh)
+    return eng.serve(requests, gen_tokens=gen_tokens, seed=seed)
 
 
 def _load_base_params(base_ckpt: str, params):
@@ -140,6 +94,16 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--k-steps", type=int, default=8,
+                    help="decode steps per device dispatch (1 host sync "
+                         "per k-steps tokens)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy (default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampling (0 = off)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="MP",
+                    help="serve sharded over a host mesh with "
+                         "model-parallel size MP (0 = unsharded)")
     ap.add_argument("--daq", action="store_true",
                     help="serve fp8-quantized weights (repro.quantize)")
     ap.add_argument("--metric", default="sign")
@@ -159,7 +123,7 @@ def main() -> None:
     if args.reduced:
         cfg = reduce_cfg(cfg)
     if cfg.family in ("vlm", "encdec"):
-        raise SystemExit("serve.py demo drives LM-style archs; "
+        raise SystemExit("serve CLI drives LM-style archs; "
                          "vlm/encdec need modality inputs (see examples/)")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -180,13 +144,29 @@ def main() -> None:
                             args.prompt_len)[0] for i in range(args.requests)]
     cache_len = args.prompt_len + args.gen + 8
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh, mesh_info
+        mesh = make_host_mesh(model=args.mesh)
+        print(f"[serve] host mesh: {mesh_info(mesh)}")
+    if args.temperature <= 0 and args.top_k == 0:
+        sp = SamplingParams()                        # greedy
+    else:  # either flag alone enables sampling (temperature defaults to 1)
+        sp = SamplingParams(greedy=False,
+                            temperature=args.temperature
+                            if args.temperature > 0 else 1.0,
+                            top_k=args.top_k)
+    eng = Engine(model, params, slots=args.batch, cache_len=cache_len,
+                 k_steps=args.k_steps, sampling=sp, mesh=mesh)
+
     t0 = time.time()
-    outs = serve(model, params, prompts, batch=args.batch,
-                 gen_tokens=args.gen, cache_len=cache_len)
+    outs, stats = eng.serve(prompts, gen_tokens=args.gen, return_stats=True)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     print(f"served {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s)")
+          f"({n_tok/dt:.1f} tok/s; {stats['host_syncs']} host syncs, "
+          f"{stats['dispatches']} dispatches of {args.k_steps} steps, "
+          f"{stats['prefill_calls']} prefill calls)")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o}")
 

@@ -7,8 +7,9 @@ optional int8 error-feedback gradient compression, AdamW update.  Gradients
 reduce across data/pod axes implicitly through GSPMD (batch is dp-sharded,
 params are FSDP-sharded -> grads reduce-scatter back to the param layout).
 
-``make_serve_step`` / ``make_prefill_step`` build the inference steps the
-decode/prefill dry-run cells lower.
+``make_prefill_step`` builds the prefill step the dry-run cells lower;
+``make_serve_step`` is a deprecated greedy shim over the serving engine's
+decode step (``repro.engine``).
 """
 from __future__ import annotations
 
@@ -84,10 +85,23 @@ def make_train_step(model: Model, tc: TrainConfig):
 
 
 def make_serve_step(model: Model):
-    """One batched decode step: greedy next token + cache update."""
+    """DEPRECATED: one batched greedy decode step.
+
+    The serving path moved to ``repro.engine`` (``make_decode_dispatch``
+    for the K-step scanned dispatch, ``make_decode_step`` for the
+    single-step form).  This shim keeps the historical
+    ``(params, tokens, cache) -> (next_tok, logits, cache)`` contract for
+    the dry-run cells and external callers."""
+    import warnings
+    warnings.warn("make_serve_step is deprecated; use "
+                  "repro.engine.make_decode_dispatch (K-step dispatch) or "
+                  "repro.engine.make_decode_step", DeprecationWarning,
+                  stacklevel=2)
+    from repro.engine.scheduler import make_decode_step
+    step = make_decode_step(model)  # greedy SamplingParams
+
     def serve_step(params, tokens, cache):
-        logits, cache = model.decode_step(params, tokens, cache)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        next_tok, logits, cache = step(params, tokens, cache)
         return next_tok, logits, cache
     return serve_step
 

@@ -142,6 +142,21 @@ def lm_logits(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     return jnp.matmul(x, table.T.astype(x.dtype))
 
 
+def last_token_logits(p: dict, x: jnp.ndarray,
+                      lengths: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Logits of each row's last *real* position.
+
+    x [B, S, D]; ``lengths`` [B] gives per-row true lengths for
+    right-padded batches (the engine's packed multi-slot prefill); None
+    means every row is full length.  Returns [B, V]."""
+    B, S, _ = x.shape
+    if lengths is None:
+        return lm_logits(p, x[:, -1:])[:, 0]
+    idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, S - 1)
+    xg = x[jnp.arange(B), idx][:, None]
+    return lm_logits(p, xg)[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # Chunked softmax cross-entropy (logits never fully materialized)
 # ---------------------------------------------------------------------------

@@ -28,7 +28,8 @@ from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.models.common import (ACT_DTYPE, apply_mlp, apply_norm,
                                  chunked_xent, embed_tokens, init_embed,
-                                 init_mlp, init_norm, lm_logits, split)
+                                 init_mlp, init_norm, last_token_logits,
+                                 lm_logits, split)
 
 LayerSpec = tuple[str, str]  # (mixer, ffn)
 
@@ -404,7 +405,10 @@ class Model:
     init: Callable
     loss_fn: Callable            # (params, batch, remat=) -> (loss, metrics)
     init_cache: Callable         # (batch, cache_len, **kw) -> cache
-    prefill: Callable            # (params, batch) -> (logits_last, cache)
+    prefill: Callable            # (params, batch, cache_len=, lengths=) ->
+                                 #   (logits_last, cache); ``lengths`` [B]
+                                 #   marks per-row true lengths of a
+                                 #   right-padded batch (engine prefill)
     decode_step: Callable        # (params, tokens, cache) -> (logits, cache)
 
 
@@ -456,7 +460,12 @@ def build_model(cfg: ModelConfig) -> Model:
                                        cache_len, mem_len)
         return c
 
-    def prefill(params, batch, cache_len: int | None = None):
+    def prefill(params, batch, cache_len: int | None = None, lengths=None):
+        """``lengths`` [B]: per-row true lengths of a right-padded batch.
+        Exact for dense causal-attention stacks (pad rows never feed real
+        rows); ring (SWA) caches and Mamba state are position-keyed and MoE
+        capacity routing couples tokens, so callers must pass equal-length
+        batches there (the engine does)."""
         tokens = batch["tokens"]
         B, S = tokens.shape
         cache_len = cache_len or S
@@ -470,8 +479,9 @@ def build_model(cfg: ModelConfig) -> Model:
         x, cache["stack"] = run_stack_prefill(
             params["stack"], x, cfg, specs, memory=mem, cache_len=cache_len)
         x = apply_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = lm_logits(params["embed"], x[:, -1:])[:, 0]
-        cache["lengths"] = jnp.full((B,), S, jnp.int32)
+        logits = last_token_logits(params["embed"], x, lengths)
+        cache["lengths"] = (jnp.full((B,), S, jnp.int32) if lengths is None
+                            else lengths.astype(jnp.int32))
         return logits, cache
 
     def decode_step(params, tokens, cache):
@@ -536,7 +546,7 @@ def _build_encdec(cfg: ModelConfig) -> Model:
                                       cache_len, mem_len),
                 "lengths": jnp.zeros((batch,), jnp.int32)}
 
-    def prefill(params, batch, cache_len: int | None = None):
+    def prefill(params, batch, cache_len: int | None = None, lengths=None):
         mem = encode(params, batch["frames"])
         tokens = batch["tokens"]
         B, S = tokens.shape
@@ -545,9 +555,11 @@ def _build_encdec(cfg: ModelConfig) -> Model:
         x, cache = run_stack_prefill(params["stack"], x, cfg, dec_specs,
                                      memory=mem, cache_len=cache_len)
         x = apply_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = lm_logits(params["embed"], x[:, -1:])[:, 0]
+        logits = last_token_logits(params["embed"], x, lengths)
         return logits, {"stack": cache,
-                        "lengths": jnp.full((B,), S, jnp.int32)}
+                        "lengths": (jnp.full((B,), S, jnp.int32)
+                                    if lengths is None
+                                    else lengths.astype(jnp.int32))}
 
     def decode_step(params, tokens, cache):
         x = embed_tokens(params["embed"], tokens)

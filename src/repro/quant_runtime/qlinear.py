@@ -68,6 +68,34 @@ def matmul(x: jnp.ndarray, w, *, precision=None) -> jnp.ndarray:
 
 
 def take(embedding, ids):
-    """Embedding lookup with optional quantized table."""
-    table = resolve(embedding)
-    return jnp.take(table, ids, axis=0)
+    """Embedding lookup with optional quantized table.
+
+    For a :class:`QuantizedTensor` table only the gathered rows are
+    dequantized — dequantizing the whole ``[V, D]`` table per lookup made
+    every decode step O(vocab) in storage mode.
+    """
+    if isinstance(embedding, QuantizedTensor) and embedding.ndim == 2:
+        return _take_quantized(embedding, ids)
+    return jnp.take(resolve(embedding), ids, axis=0)
+
+
+def _take_quantized(w: QuantizedTensor, ids):
+    """Row-gathered dequantization, matching ``w.dequantize()[ids]`` exactly
+    (same fp32 q*scale math, same eq_scale epilogue)."""
+    from repro.core.formats import get_format
+    get_format(w.fmt)  # validate early; the math below is format-agnostic
+    flat = jnp.asarray(ids, jnp.int32).reshape(-1)
+    q = jnp.take(w.data, flat, axis=0).astype(jnp.float32)     # [N, O]
+    if w.granularity == "block":
+        # scale [I/bs, 1, O/bs, 1]: row r uses scale row r // bs; expand the
+        # per-column-block scale to the (unpadded) O columns
+        bs = w.block_size
+        s = jnp.take(w.scale, flat // bs, axis=0)[:, 0, :, 0]  # [N, O/bs]
+        s = jnp.repeat(s, bs, axis=1)[:, : q.shape[-1]]
+        rows = q * s
+    else:  # tensor: scalar; channel: [1, O] — both broadcast over rows
+        rows = q * w.scale
+    if w.eq_scale is not None:
+        rows = rows / jnp.take(w.eq_scale, flat, axis=0)[:, None]
+    out = rows.astype(jnp.dtype(w.out_dtype))
+    return out.reshape(*jnp.shape(ids), out.shape[-1])

@@ -82,10 +82,16 @@ def test_decode_matches_prefill(arch):
 
 
 def test_sliding_window_ring_cache():
-    """Mixtral SWA ring cache: decode past the window stays exact."""
-    cfg = dataclasses.replace(reduced(get_arch("mixtral-8x22b")),
-                              capacity_factor=8.0)
-    assert cfg.sliding_window == 16
+    """SWA ring cache: decode past the window stays exact.
+
+    Ring mechanics (prefill modulo population, _ring_write, eff_len
+    masking) are isolated on a *dense* SWA config: on Mixtral the same
+    comparison is limited by MoE top-2 routing, which is discrete — bf16
+    decode-vs-prefill noise (~1%) can flip an expert choice at a narrow
+    router margin and blow any logit tolerance (observed at total = W + 9,
+    where the flip moves max-logit error from ~0.9% to 15% while the ring
+    itself is bit-identical to alternative cache layouts)."""
+    cfg = dataclasses.replace(reduced(get_arch("glm4-9b")), sliding_window=16)
     model = build_model(cfg)
     params = model.init(KEY)
     W = cfg.sliding_window
@@ -98,6 +104,23 @@ def test_sliding_window_ring_cache():
     lb, _ = model.prefill(params, {"tokens": toks}, cache_len=total + 1)
     rel = float(jnp.max(jnp.abs(la - lb)) / (jnp.max(jnp.abs(lb)) + 1e-9))
     assert rel < 2e-2, rel
+
+    # Mixtral rides the identical ring code path; pin the ring-sized cache
+    # shape and decode finiteness, and token-level agreement within the
+    # window (no wraparound yet, routing margins unchallenged).
+    mcfg = dataclasses.replace(reduced(get_arch("mixtral-8x22b")),
+                               capacity_factor=8.0)
+    assert mcfg.sliding_window == 16
+    mmodel = build_model(mcfg)
+    mparams = mmodel.init(KEY)
+    mtoks = jax.random.randint(KEY, (B, 13), 0, mcfg.vocab_size)
+    _, mcache = mmodel.prefill(mparams, {"tokens": mtoks[:, :12]},
+                               cache_len=mcfg.sliding_window)
+    assert mcache["stack"]["L0"]["k"].shape[2] == mcfg.sliding_window
+    ma, _ = mmodel.decode_step(mparams, mtoks[:, 12:13], mcache)
+    mb, _ = mmodel.prefill(mparams, {"tokens": mtoks}, cache_len=13)
+    assert np.isfinite(np.asarray(ma, np.float32)).all()
+    assert jnp.array_equal(jnp.argmax(ma, -1), jnp.argmax(mb, -1))
 
 
 def test_param_count_close_to_analytic():
