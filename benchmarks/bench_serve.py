@@ -1,9 +1,17 @@
-"""Serving bench: legacy host-scheduled loop vs device-resident engine.
+"""Serving bench: legacy host loop vs contiguous engine vs paged engine.
 
-Races the two continuous batchers on identical greedy workloads (reduced
-arch, CPU-scale) and reports tok/s plus host syncs per generated token —
-the metric the engine exists to crush (the old loop blocks once per slot
-per token; the engine once per K decode steps).
+Two workloads, each run greedy and parity-checked token-for-token:
+
+* **uniform** — every request has the same prompt length (the contiguous
+  cache's best case).  Races the legacy host-scheduled loop against the
+  device-resident engine (host syncs per token — the PR 2 metric) and the
+  paged engine at capacity parity (pool = slots * ceil(cap/bs) blocks), so
+  any block-table gather overhead shows up as a tok/s delta.
+* **mixed** — prompt lengths spread ~8x.  The contiguous cache must size
+  every slot for the longest admissible request; the paged pool is sized to
+  the workload's actual concurrent need (sum of the ``slots`` largest
+  per-request reservations), so ``cache_bytes`` drops roughly by the
+  longest/typical length ratio while outputs stay token-exact.
 
   PYTHONPATH=src python -m benchmarks.bench_serve [--gen 24 --k-steps 8 ...]
   PYTHONPATH=src python -m benchmarks.run serve     # same, CSV + JSON
@@ -22,59 +30,124 @@ import jax
 from benchmarks.common import emit
 from repro.configs import get_arch, reduced
 from repro.data import LanguageSpec, sample_batch
-from repro.engine import Engine, serve_host_loop
+from repro.engine import Engine, blocks_for, serve_host_loop
 from repro.models import build_model
 
 
-def _timed(fn):
-    fn()                      # warm the jit caches
-    t0 = time.perf_counter()
-    out = fn()
-    return out, time.perf_counter() - t0
+def _race(fns: dict, repeats: int = 3) -> dict:
+    """Time competing serve loops fairly: warm every jit cache first, then
+    round-robin the timed repeats (best-of-N per loop) so slow host-load
+    drift hits all contenders equally instead of whichever ran last."""
+    outs = {name: fn() for name, fn in fns.items()}      # warm
+    best = {name: float("inf") for name in fns}
+    for _ in range(repeats):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            outs[name] = fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: (outs[name], best[name]) for name in fns}
 
 
-def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 2,
+def _row(dt, stats):
+    tok = stats["tokens"]
+    return {"tok_per_s": tok / dt, "wall_s": dt, "tokens": tok,
+            "host_syncs": stats["host_syncs"],
+            "host_syncs_per_token": stats["host_syncs"] / tok,
+            "prefill_calls": stats["prefill_calls"],
+            "dispatches": stats["dispatches"],
+            "cache_bytes": stats.get("cache_bytes", 0)}
+
+
+def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
         prompt_len: int = 16, gen: int = 24, k_steps: int = 8,
-        out_path: str = "BENCH_serve.json") -> dict:
+        block_size: int = 8, out_path: str = "BENCH_serve.json") -> dict:
     cfg = reduced(get_arch(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     spec = LanguageSpec(vocab=cfg.vocab_size)
+
+    # ---- uniform workload --------------------------------------------------
     prompts = [sample_batch(jax.random.PRNGKey(i), spec, 1, prompt_len)[0]
                for i in range(requests)]
-    cache_len = prompt_len + gen + 9
-
-    (old_outs, old_stats), old_dt = _timed(lambda: serve_host_loop(
-        model, params, prompts, batch=batch, gen_tokens=gen,
-        cache_len=cache_len, return_stats=True))
+    cache_len = prompt_len + gen + 8   # block-aligned for the default --block-size
 
     eng = Engine(model, params, slots=batch, cache_len=cache_len,
                  k_steps=k_steps)
-    (eng_outs, eng_stats), eng_dt = _timed(lambda: eng.serve(
-        prompts, gen_tokens=gen, return_stats=True))
+    peng = Engine(model, params, slots=batch, cache_len=cache_len,
+                  k_steps=k_steps, paged=True, block_size=block_size)
+    raced = _race({
+        "old": lambda: serve_host_loop(
+            model, params, prompts, batch=batch, gen_tokens=gen,
+            cache_len=cache_len, return_stats=True),
+        "engine": lambda: eng.serve(prompts, gen_tokens=gen,
+                                    return_stats=True),
+        "paged": lambda: peng.serve(prompts, gen_tokens=gen,
+                                    return_stats=True),
+    })
+    (old_outs, old_stats), old_dt = raced["old"]
+    (eng_outs, eng_stats), eng_dt = raced["engine"]
+    (pag_outs, pag_stats), pag_dt = raced["paged"]
 
-    if eng_outs != old_outs:
-        print("bench_serve: WARNING: engine outputs differ from the host "
-              "loop (greedy parity violated)", flush=True)
+    parity = eng_outs == old_outs and pag_outs == eng_outs
+    if not parity:
+        print("bench_serve: WARNING: engine outputs differ (greedy parity "
+              "violated)", flush=True)
 
-    def row(name, dt, stats):
-        tok = stats["tokens"]
-        return {"tok_per_s": tok / dt, "wall_s": dt, "tokens": tok,
-                "host_syncs": stats["host_syncs"],
-                "host_syncs_per_token": stats["host_syncs"] / tok,
-                "prefill_calls": stats["prefill_calls"],
-                "dispatches": stats["dispatches"]}
+    # ---- mixed-length workload --------------------------------------------
+    spread = [max(4, prompt_len // 2), prompt_len * 4, prompt_len,
+              prompt_len * 2, max(4, prompt_len // 2), prompt_len * 3,
+              prompt_len, prompt_len]
+    mixed_lens = [spread[i % len(spread)] for i in range(requests)]
+    mixed = [sample_batch(jax.random.PRNGKey(100 + i), spec, 1, L)[0]
+             for i, L in enumerate(mixed_lens)]
+    mixed_cache_len = max(mixed_lens) + gen + 8   # contiguous: worst case
+    # paged pool: the `batch` largest concurrent reservations
+    needs = sorted((blocks_for(L + gen - 1, block_size)
+                    for L in mixed_lens), reverse=True)
+    num_blocks = sum(needs[:batch])
+
+    meng = Engine(model, params, slots=batch, cache_len=mixed_cache_len,
+                  k_steps=k_steps)
+    mpag = Engine(model, params, slots=batch, cache_len=mixed_cache_len,
+                  k_steps=k_steps, paged=True, block_size=block_size,
+                  num_blocks=num_blocks)
+    mraced = _race({
+        "engine": lambda: meng.serve(mixed, gen_tokens=gen,
+                                     return_stats=True),
+        "paged": lambda: mpag.serve(mixed, gen_tokens=gen,
+                                    return_stats=True),
+    })
+    (m_eng_outs, m_eng_stats), m_eng_dt = mraced["engine"]
+    (m_pag_outs, m_pag_stats), m_pag_dt = mraced["paged"]
+
+    mixed_parity = m_pag_outs == m_eng_outs
+    if not mixed_parity:
+        print("bench_serve: WARNING: paged outputs differ on the mixed "
+              "workload (greedy parity violated)", flush=True)
 
     result = {
         "workload": {"arch": arch, "requests": requests, "batch": batch,
                      "prompt_len": prompt_len, "gen": gen,
-                     "k_steps": k_steps, "greedy_parity":
-                     eng_outs == old_outs},
-        "old": row("old", old_dt, old_stats),
-        "engine": row("engine", eng_dt, eng_stats),
+                     "k_steps": k_steps, "block_size": block_size,
+                     "greedy_parity": parity},
+        "old": _row(old_dt, old_stats),
+        "engine": _row(eng_dt, eng_stats),
+        "paged": _row(pag_dt, pag_stats),
+        "mixed": {
+            "prompt_lens": mixed_lens,
+            "greedy_parity": mixed_parity,
+            "num_blocks": num_blocks,
+            "engine": _row(m_eng_dt, m_eng_stats),
+            "paged": _row(m_pag_dt, m_pag_stats),
+        },
     }
     result["speedup"] = (result["engine"]["tok_per_s"]
                          / result["old"]["tok_per_s"])
+    result["paged_vs_engine_uniform"] = (result["paged"]["tok_per_s"]
+                                         / result["engine"]["tok_per_s"])
+    result["mixed"]["cache_bytes_ratio"] = (
+        result["mixed"]["paged"]["cache_bytes"]
+        / max(result["mixed"]["engine"]["cache_bytes"], 1))
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     emit("serve.old_host_loop", old_dt * 1e6,
@@ -83,7 +156,18 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 2,
     emit("serve.engine", eng_dt * 1e6,
          f"tok_per_s={result['engine']['tok_per_s']:.1f};"
          f"syncs_per_tok={result['engine']['host_syncs_per_token']:.3f}")
+    emit("serve.paged", pag_dt * 1e6,
+         f"tok_per_s={result['paged']['tok_per_s']:.1f};"
+         f"cache_bytes={result['paged']['cache_bytes']}")
     emit("serve.speedup", 0, f"x={result['speedup']:.2f}")
+    emit("serve.mixed.engine", m_eng_dt * 1e6,
+         f"tok_per_s={result['mixed']['engine']['tok_per_s']:.1f};"
+         f"cache_bytes={result['mixed']['engine']['cache_bytes']}")
+    emit("serve.mixed.paged", m_pag_dt * 1e6,
+         f"tok_per_s={result['mixed']['paged']['tok_per_s']:.1f};"
+         f"cache_bytes={result['mixed']['paged']['cache_bytes']}")
+    emit("serve.mixed.cache_ratio", 0,
+         f"paged/contig={result['mixed']['cache_bytes_ratio']:.3f}")
     return result
 
 
@@ -91,14 +175,15 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--k-steps", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     run(args.arch, args.requests, args.batch, args.prompt_len, args.gen,
-        args.k_steps, args.out)
+        args.k_steps, args.block_size, args.out)
 
 
 if __name__ == "__main__":

@@ -72,24 +72,22 @@ class Instr:
         self.rest = rest          # everything after the opening paren
 
     def operands(self) -> list[str]:
+        # Scan to the matching close paren of the operand list, then pull
+        # the %name references.  Operand entries may carry full type
+        # annotations ("f32[128,256]{1,0} %Arg_0.1", jax >= 0.4.3x text
+        # format) whose commas must not split tokens — hence the regex over
+        # the balanced segment instead of a comma tokenizer.
         depth = 1
-        out: list[str] = []
-        token = []
-        for ch in self.rest:
+        end = len(self.rest)
+        for i, ch in enumerate(self.rest):
             if ch == "(":
                 depth += 1
             elif ch == ")":
                 depth -= 1
                 if depth == 0:
+                    end = i
                     break
-            if depth >= 1 and ch not in "(),":
-                token.append(ch)
-            if ch == "," and depth == 1:
-                out.append("".join(token).strip())
-                token = []
-        if token:
-            out.append("".join(token).strip())
-        return [t.lstrip("%") for t in out if t.strip().startswith("%")]
+        return re.findall(r"%([\w\.\-]+)", self.rest[:end])
 
     def attr(self, pattern: str) -> str | None:
         m = re.search(pattern, self.rest)

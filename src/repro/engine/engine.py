@@ -21,6 +21,13 @@ no extra syncs); everything per-token lives on device:
   ``launch.sharding.params_shardings`` (quantized ``wq/data`` / ``wq/scale``
   leaves inherit the dense weight's layout by tree path) and the decode
   cache with ``cache_shardings``; all jitted steps then run GSPMD-partitioned.
+* **paged KV cache** — ``paged=True`` swaps the per-slot contiguous cache
+  for a global block pool with per-slot block tables and a device-resident
+  free-list (engine/paged.py): memory tracks live tokens instead of
+  ``slots * cache_len``, admission reserves each request's lifetime worst
+  case against the pool (FIFO; requests wait when the head doesn't fit),
+  and blocks recycle inside the K-step scan as slots drain.  Greedy
+  outputs stay token-exact vs the contiguous cache.
 
 Right-padded prefill is only exact when a row's hidden states cannot depend
 on positions after it or on other tokens' presence: pure causal attention
@@ -37,9 +44,12 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro.engine import paged as P
 from repro.engine.sampler import SamplingParams, sample
 from repro.engine.scheduler import init_slot_state, make_decode_dispatch
 from repro.models.lm import Model
+
+_BKEYS = P.BSTATE_KEYS
 
 
 @dataclass(frozen=True)
@@ -49,6 +59,10 @@ class EngineConfig:
     k_steps: int = 8        # decode steps per dispatch (1 host sync each)
     sampling: SamplingParams = field(default_factory=SamplingParams)
     seed: int = 0
+    paged: bool = False     # paged KV cache (block pool + block tables)
+    block_size: int = 16    # tokens per KV block (paged only)
+    num_blocks: int = 0     # pool size; 0 -> slots * ceil(cap / block_size)
+                            # (capacity parity with the contiguous cache)
 
 
 class Engine:
@@ -79,16 +93,33 @@ class Engine:
         sp, K = cfg.sampling, cfg.k_steps
         if K < 1:
             raise ValueError(f"k_steps must be >= 1, got {K}")
-        self._dispatch = jax.jit(make_decode_dispatch(model, sp, K),
-                                 donate_argnums=(1, 2))
+        if cfg.paged:
+            window = mcfg.sliding_window
+            cap = min(cfg.cache_len, window) if window else cfg.cache_len
+            if window and cap != window:
+                raise ValueError(
+                    f"paged SWA serving needs cache_len >= sliding_window "
+                    f"({cfg.cache_len} < {window})")
+            self._mb = P.blocks_for(cap, cfg.block_size)  # blocks per slot
+            self._num_blocks = cfg.num_blocks or cfg.slots * self._mb
+        self._dispatch = jax.jit(
+            make_decode_dispatch(model, sp, K, paged=cfg.paged),
+            donate_argnums=(1, 2))
         self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
+        self._scatter_paged = jax.jit(self._scatter_paged_impl,
+                                      donate_argnums=(0, 1))
+        # paged prefill sizes the part cache to the admitted group (block-
+        # aligned prompt rows), so admission cost tracks prompt length; the
+        # contiguous path always materializes cache_len rows.
         self._prefill_full = jax.jit(
-            lambda p, toks: model.prefill(p, {"tokens": toks},
-                                          cache_len=cfg.cache_len))
+            lambda p, toks, cl: model.prefill(p, {"tokens": toks},
+                                              cache_len=cl),
+            static_argnums=(2,))
         self._prefill_padded = jax.jit(
-            lambda p, toks, lens: model.prefill(p, {"tokens": toks},
-                                                cache_len=cfg.cache_len,
-                                                lengths=lens))
+            lambda p, toks, lens, cl: model.prefill(p, {"tokens": toks},
+                                                    cache_len=cl,
+                                                    lengths=lens),
+            static_argnums=(3,))
 
     # -- sharded placement --------------------------------------------------
 
@@ -128,10 +159,86 @@ class Engine:
         }
         return new, state
 
+    @staticmethod
+    def _scatter_paged_impl(cache, state, part_cache, slots, lens, first,
+                            remaining0, counts):
+        """Admit one prefilled group into the paged cache: release the
+        target slots' stale blocks, allocate ``counts[i]`` fresh blocks per
+        slot, scatter the part cache's K/V rows block-wise into the pools
+        (rows past a slot's true need land in the trash block) and dense
+        (SSM) leaves slot-wise — one jitted update for the whole group."""
+        B = state["active"].shape[0]
+        bstate = {k: cache[k] for k in _BKEYS}
+        done = jnp.zeros((B,), bool).at[slots].set(True)
+        bstate = P.release_slots(bstate, done)
+
+        # static block geometry from the part tree (absent for pure-SSM)
+        nbl = 0
+        for lcache in part_cache["stack"].values():
+            if "k" in lcache:
+                bs = next(l for l in cache["stack"].values()
+                          if "pk" in l)["pk"].shape[2]
+                nbl = lcache["k"].shape[2] // bs
+                break
+        if nbl:
+            bstate, wids = P.alloc_admit(bstate, slots, counts, nbl)
+        # a slot that owes no decode steps must not write or grow; its
+        # blocks are released again right below (the KV is never read —
+        # the single output token came straight from the prefill logits)
+        bstate["slot_active"] = bstate["slot_active"].at[slots].set(
+            remaining0 > 0)
+        bstate = P.release_slots(bstate, done & (remaining0 <= 0))
+
+        def scatter_group(pool_group, part_group):
+            new_group = {}
+            for lkey, lcache in pool_group.items():
+                pl, nl = part_group[lkey], {}
+                for name, leaf in lcache.items():
+                    if name in ("pk", "pv"):
+                        src = pl["k" if name == "pk" else "v"]
+                        n, g, L = src.shape[:3]
+                        blocks = src.reshape(n, g * nbl, L // nbl,
+                                             *src.shape[3:])
+                        nl[name] = leaf.at[:, wids.reshape(-1)].set(
+                            blocks.astype(leaf.dtype))
+                    else:  # contiguous per-slot leaf (SSM state)
+                        nl[name] = leaf.at[:, slots].set(
+                            pl[name].astype(leaf.dtype))
+                new_group[lkey] = nl
+            return new_group
+
+        new = dict(cache)
+        new.update(bstate)
+        new["stack"] = scatter_group(cache["stack"], part_cache["stack"])
+        if "prefix" in cache:
+            new["prefix"] = scatter_group(cache["prefix"],
+                                          part_cache["prefix"])
+        new["lengths"] = cache["lengths"].at[slots].set(lens)
+        state = {
+            "cur": state["cur"].at[slots, 0].set(first),
+            "active": state["active"].at[slots].set(remaining0 > 0),
+            "remaining": state["remaining"].at[slots].set(remaining0),
+        }
+        return new, state
+
+    def _group_cache_len(self, Lmax: int) -> int:
+        """Prefill cache rows for one admitted group.  Contiguous: always
+        the full per-slot capacity.  Paged: SWA pages the whole ring (the
+        ring cap must match the decode cap), dense pages just the block-
+        aligned prompt rows — admission memory tracks the prompt."""
+        cfg = self.cfg
+        if not cfg.paged:
+            return cfg.cache_len
+        if self.model.cfg.sliding_window:
+            return cfg.cache_len
+        return min(P.blocks_for(Lmax, cfg.block_size), self._mb) \
+            * cfg.block_size
+
     def _admit(self, cache, state, free_slots, prompts, gen_tokens, key):
         """Prefill ``prompts`` into ``free_slots``.  Returns (cache, state,
         first_tokens host list, n_prefill_calls)."""
-        B = self.cfg.slots
+        cfg = self.cfg
+        B = cfg.slots
         lens = [int(p.shape[0]) for p in prompts]
         if len(set(lens)) == 1:
             groups = [list(range(len(prompts)))]
@@ -148,17 +255,34 @@ class Engine:
         for g in groups:
             key, sub = jax.random.split(key)
             Lmax = max(lens[i] for i in g)
+            cl = self._group_cache_len(Lmax)
             toks = jnp.stack([
                 jnp.pad(prompts[i], (0, Lmax - lens[i])) for i in g
             ]).astype(jnp.int32)
             if all(lens[i] == Lmax for i in g):
-                logits, part = self._prefill_full(self.params, toks)
+                logits, part = self._prefill_full(self.params, toks, cl)
             else:
                 glens = jnp.asarray([lens[i] for i in g], jnp.int32)
-                logits, part = self._prefill_padded(self.params, toks, glens)
+                logits, part = self._prefill_padded(self.params, toks,
+                                                    glens, cl)
             first = sample(logits, sub, self.cfg.sampling)
             g_slots = [free_slots[i] for i in g]
-            if len(g) == B and g_slots == list(range(B)):
+            if cfg.paged:
+                if self.model.cfg.sliding_window:
+                    counts = jnp.full((len(g),), self._mb, jnp.int32)
+                else:
+                    # clamp to per-slot capacity: an over-long prompt only
+                    # keeps its first cap rows (the contiguous cache drops
+                    # the overflow the same way) — without the clamp the
+                    # allocator would debit blocks the scatter never places
+                    counts = jnp.asarray(
+                        [min(P.blocks_for(lens[i], cfg.block_size),
+                             self._mb) for i in g], jnp.int32)
+                cache, state = self._scatter_paged(
+                    cache, state, part, jnp.asarray(g_slots, jnp.int32),
+                    jnp.asarray([lens[i] for i in g], jnp.int32),
+                    first, rem0, counts)
+            elif len(g) == B and g_slots == list(range(B)):
                 # scatter-free: the prefill result IS the new cache
                 if self.mesh is not None:
                     part = self._place_cache(part)
@@ -177,6 +301,16 @@ class Engine:
 
     # -- serve --------------------------------------------------------------
 
+    def _blocks_needed(self, prompt_len: int, gen_tokens: int) -> int:
+        """Worst-case pool blocks one request can ever hold: SWA rings page
+        the whole window; dense requests write ``prompt + gen - 1`` cache
+        rows over their lifetime (capacity-clamped, like the contiguous
+        cache drops overflow writes)."""
+        if self.model.cfg.sliding_window:
+            return self._mb
+        return min(P.blocks_for(prompt_len + gen_tokens - 1,
+                                self.cfg.block_size), self._mb)
+
     def serve(self, requests, *, gen_tokens: int, seed: int | None = None,
               return_stats: bool = False):
         """Serve ``requests`` (1-D token arrays); each gets ``gen_tokens``
@@ -191,7 +325,20 @@ class Engine:
         if gen_tokens < 1 or not requests:
             return ([], stats) if return_stats else []
 
-        cache = model.init_cache(B, cfg.cache_len)
+        if cfg.paged:
+            cache = model.init_paged_cache(B, cfg.cache_len,
+                                           block_size=cfg.block_size,
+                                           num_blocks=self._num_blocks)
+            for r in requests:
+                need = self._blocks_needed(int(r.shape[0]), gen_tokens)
+                if need > self._num_blocks:
+                    raise ValueError(
+                        f"request of {int(r.shape[0])} tokens needs {need} "
+                        f"blocks but the pool has {self._num_blocks}")
+        else:
+            cache = model.init_cache(B, cfg.cache_len)
+        stats["cache_bytes"] = sum(
+            l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
         state = init_slot_state(B)
         if self.mesh is not None:
             cache = self._place_cache(cache)
@@ -199,25 +346,51 @@ class Engine:
         queue = deque(range(len(requests)))
         slot_rid = [-1] * B     # request id per slot (host mirror)
         slot_rem = [0] * B      # remaining budget     (host mirror)
+        # host mirror of worst-case block reservations (paged): a slot
+        # reserves its request's lifetime maximum at admission and drops it
+        # when the request finishes — the device free-list only ever runs
+        # *ahead* of this view (it reclaims blocks mid-scan), so admission
+        # against reservations can never underflow the pool
+        slot_rsv = [0] * B
 
         while queue or any(r >= 0 for r in slot_rid):
             free = [s for s in range(B) if slot_rid[s] < 0]
             if queue and free:
-                take = min(len(free), len(queue))
-                rids = [queue.popleft() for _ in range(take)]
-                key, sub = jax.random.split(key)
-                cache, state, first, ncalls = self._admit(
-                    cache, state, free[:take],
-                    [requests[r] for r in rids], gen_tokens, sub)
-                stats["prefill_calls"] += ncalls
-                stats["host_syncs"] += ncalls
-                stats["tokens"] += take
-                for s, r, t in zip(free, rids, first):
-                    outputs[r] = [t]
-                    slot_rid[s], slot_rem[s] = r, gen_tokens - 1
-                for s in free[:take]:   # gen_tokens == 1 finishes now
-                    if slot_rem[s] <= 0:
-                        slot_rid[s] = -1
+                if cfg.paged:
+                    take_slots, rids = [], []
+                    rsv_total = sum(slot_rsv)
+                    for s in free:
+                        if not queue:
+                            break
+                        need = self._blocks_needed(
+                            int(requests[queue[0]].shape[0]), gen_tokens)
+                        if rsv_total + need > self._num_blocks:
+                            break   # FIFO: head request must fit first
+                        rsv_total += need
+                        slot_rsv[s] = need
+                        take_slots.append(s)
+                        rids.append(queue.popleft())
+                    assert take_slots or any(r >= 0 for r in slot_rid), \
+                        "admission stalled with an idle pool"
+                else:
+                    take = min(len(free), len(queue))
+                    take_slots = free[:take]
+                    rids = [queue.popleft() for _ in range(take)]
+                if rids:
+                    key, sub = jax.random.split(key)
+                    cache, state, first, ncalls = self._admit(
+                        cache, state, take_slots,
+                        [requests[r] for r in rids], gen_tokens, sub)
+                    stats["prefill_calls"] += ncalls
+                    stats["host_syncs"] += ncalls
+                    stats["tokens"] += len(rids)
+                    for s, r, t in zip(take_slots, rids, first):
+                        outputs[r] = [t]
+                        slot_rid[s], slot_rem[s] = r, gen_tokens - 1
+                    for s in take_slots:   # gen_tokens == 1 finishes now
+                        if slot_rem[s] <= 0:
+                            slot_rid[s] = -1
+                            slot_rsv[s] = 0
             if not any(r >= 0 for r in slot_rid):
                 continue
 
@@ -238,6 +411,7 @@ class Engine:
                 slot_rem[s] -= len(row)
                 if slot_rem[s] <= 0:
                     slot_rid[s] = -1
+                    slot_rsv[s] = 0  # device freed the blocks mid-scan
 
         outs = [outputs[i] for i in sorted(outputs)]
         return (outs, stats) if return_stats else outs

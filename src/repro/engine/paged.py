@@ -1,0 +1,166 @@
+"""Paged KV-cache: global block pool, per-slot block tables, device free-list.
+
+The contiguous engine cache reserves ``cache_len`` rows per slot per layer,
+so the longest admissible request dictates the memory of every slot.  The
+paged cache replaces the per-slot rows with a **global pool of fixed-size
+token blocks** shared by all slots:
+
+* per attention layer: ``pk`` / ``pv`` pools of shape
+  ``[num_blocks + 1, block_size, Kv, hd]`` — the extra last block is a
+  **trash sink**: writes for inactive slots (the dispatch keeps decoding
+  finished slots, same as the contiguous engine) and capacity overflows are
+  routed there instead of corrupting live blocks;
+* one **block table** ``tbl [slots, max_blocks]`` shared by every attention
+  layer (all layers advance in lockstep, so one table serves the stack);
+  ``-1`` marks an unallocated entry and — because jnp gathers wrap negative
+  indices — conveniently gathers the trash block, whose garbage the length
+  mask then discards;
+* a **device-resident free-list** ``free [num_blocks]`` (a stack of block
+  ids) with scalar stack pointer ``n_free``: blocks are popped inside the
+  jitted decode step the moment a slot's length crosses a block boundary and
+  pushed back inside the K-step scan the moment a slot's budget drains — so
+  capacity recycles mid-dispatch, without a host round-trip.
+
+Everything here is shape-static jit-safe jnp; per-layer wiring lives in
+``models/lm.py`` (``init_paged_cache`` / ``decode_step_paged``) and the
+host-side admission policy in ``engine.py``.
+
+SSM / Mamba layers keep their contiguous per-slot state (it has no sequence
+axis to page) and are routed around: their cache leaves stay ``[n, B, ...]``
+dense and only ``pk``/``pv`` leaves are pooled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1  # unallocated table entry; wraps to the trash block on gather
+
+# allocator-state keys riding at the top level of a paged cache pytree
+BSTATE_KEYS = ("tbl", "free", "n_free", "slot_active")
+
+
+# ---------------------------------------------------------------------------
+# Block-state construction
+# ---------------------------------------------------------------------------
+
+def init_block_state(slots: int, max_blocks: int, num_blocks: int) -> dict:
+    """Zeroed allocator state: empty tables, fully-free stack."""
+    return {
+        "tbl": jnp.full((slots, max_blocks), NEG, jnp.int32),
+        "free": jnp.arange(num_blocks, dtype=jnp.int32),
+        "n_free": jnp.int32(num_blocks),
+        "slot_active": jnp.zeros((slots,), bool),
+    }
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` cache rows."""
+    return -(-n_tokens // block_size)
+
+
+# ---------------------------------------------------------------------------
+# Decode-time allocation / release (jit-safe, called inside the dispatch)
+# ---------------------------------------------------------------------------
+
+def alloc_step(bstate: dict, lengths: jnp.ndarray, block_size: int,
+               cap: int, ring: bool):
+    """One decode step's allocation + write routing, fused.
+
+    Pops a fresh block for every active slot whose write position lands in
+    an unallocated table entry (one write per slot per step, so at most one
+    block per slot); pool exhaustion leaves the entry unallocated and the
+    write then lands in the trash block instead of corrupting the pool.
+
+    Returns ``(bstate, wblk [B], woff [B])`` — the per-slot write target
+    for this step's KV row.  ``cap`` is the logical per-slot capacity
+    (``max_blocks * block_size``); ``ring`` maps positions modulo ``cap``
+    (SWA ring semantics).  Inactive slots and positions beyond capacity are
+    routed to the trash block.
+    """
+    tbl, free, n_free = bstate["tbl"], bstate["free"], bstate["n_free"]
+    B, MB = tbl.shape
+    trash = free.shape[0]                       # pool index num_blocks
+    pos = lengths % cap if ring else lengths
+    valid = bstate["slot_active"] & (pos < cap)
+    j = jnp.clip(pos // block_size, 0, MB - 1)
+    bidx = jnp.arange(B)
+    cur = tbl[bidx, j]
+    need = valid & (cur < 0)
+    k = jnp.cumsum(need.astype(jnp.int32))      # 1-based pop rank per slot
+    ok = need & (k <= n_free)
+    ids = free[jnp.clip(n_free - k, 0, trash - 1)]
+    blk = jnp.where(ok, ids, cur)
+    tbl = tbl.at[bidx, j].set(blk)
+    n_free = n_free - jnp.sum(ok.astype(jnp.int32))
+    wblk = jnp.where(valid & (blk >= 0), blk, trash)
+    woff = pos % block_size
+    return {**bstate, "tbl": tbl, "n_free": n_free}, wblk, woff
+
+
+def release_slots(bstate: dict, done: jnp.ndarray) -> dict:
+    """Push every block of the ``done`` slots back on the free stack and
+    clear their table rows + active flags.  Safe to call with slots that own
+    nothing (idempotent)."""
+    tbl, free, n_free = bstate["tbl"], bstate["free"], bstate["n_free"]
+    mask = (done[:, None] & (tbl >= 0)).reshape(-1)
+    ids = tbl.reshape(-1)
+    rank = jnp.cumsum(mask.astype(jnp.int32))   # 1-based push rank
+    # out-of-range destinations are dropped by the scatter (mode=drop),
+    # which is exactly what non-freed entries want
+    dest = jnp.where(mask, n_free + rank - 1, free.shape[0])
+    free = free.at[dest].set(ids, mode="drop")
+    n_free = n_free + jnp.sum(mask.astype(jnp.int32))
+    tbl = jnp.where(done[:, None], NEG, tbl)
+    active = bstate["slot_active"] & ~done
+    return {**bstate, "tbl": tbl, "free": free, "n_free": n_free,
+            "slot_active": active}
+
+
+# ---------------------------------------------------------------------------
+# Admission-time allocation (jit-safe, called from the engine's scatter)
+# ---------------------------------------------------------------------------
+
+def alloc_admit(bstate: dict, slots: jnp.ndarray, counts: jnp.ndarray,
+                nbl: int):
+    """Allocate ``counts[i]`` blocks for each admitted slot ``slots[i]``.
+
+    Returns ``(bstate, wids [g, nbl])`` — per-slot write-block ids padded
+    with the trash index beyond ``counts[i]`` (the prefill scatter writes
+    ``nbl`` block rows per slot; rows past the slot's true need are pad
+    garbage and belong in the trash).  The caller (engine) reserves
+    capacity on the host, so the stack cannot underflow here.
+    """
+    tbl, free, n_free = bstate["tbl"], bstate["free"], bstate["n_free"]
+    g = slots.shape[0]
+    trash = free.shape[0]
+    offs = jnp.cumsum(counts)                   # [g] blocks consumed so far
+    jj = jnp.arange(nbl)[None, :]               # [1, nbl]
+    pos = n_free - offs[:, None] + jj           # stack index per (slot, j)
+    take = jj < counts[:, None]
+    ids = free[jnp.clip(pos, 0, trash - 1)]
+    wids = jnp.where(take, ids, trash)
+    new_rows = jnp.where(take, ids, NEG)
+    tbl = tbl.at[slots].set(
+        jnp.pad(new_rows, ((0, 0), (0, tbl.shape[1] - nbl)),
+                constant_values=NEG))
+    n_free = n_free - jnp.sum(counts)
+    active = bstate["slot_active"].at[slots].set(True)
+    return {**bstate, "tbl": tbl, "n_free": n_free,
+            "slot_active": active}, wids
+
+
+# ---------------------------------------------------------------------------
+# Gather
+# ---------------------------------------------------------------------------
+
+def gather_blocks(pool: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
+    """pool [NB+1, bs, Kv, hd], tbl [B, MB] -> [B, MB*bs, Kv, hd].
+
+    Unallocated entries (-1) wrap to the trash block; callers mask by
+    length, so its garbage never reaches the softmax.
+    """
+    B, MB = tbl.shape
+    bs = pool.shape[1]
+    g = pool[tbl]                               # [B, MB, bs, Kv, hd]
+    return g.reshape(B, MB * bs, *pool.shape[2:])

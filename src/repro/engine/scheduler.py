@@ -32,23 +32,41 @@ def init_slot_state(n_slots: int) -> dict:
     }
 
 
-def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int):
+def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
+                         *, paged: bool = False):
     """Build the jitted K-step decode dispatch.
 
     ``dispatch(params, state, cache, key)`` -> (state, cache, tokens [B, K],
     emitted [B, K] bool).  ``emitted[b, j]`` marks tokens produced while slot
     ``b`` was still active; it is a contiguous prefix per row, so the host
     can append ``tokens[b, emitted[b]]`` verbatim.
+
+    With ``paged=True`` the cache is the paged block pool
+    (``model.init_paged_cache``): each step runs ``decode_step_paged`` (which
+    pops blocks from the device free-list as slots cross block boundaries)
+    and the moment a slot's budget drains its blocks are pushed back **inside
+    the scan** — capacity recycles mid-dispatch without a host round-trip.
     """
+    step_fn = model.decode_step_paged if paged else model.decode_step
+    if paged and step_fn is None:
+        raise NotImplementedError(
+            f"model family {model.cfg.family!r} has no paged decode path")
+
     def dispatch(params, state: dict, cache: dict, key):
         def body(carry, step_key):
             st, cache = carry
-            logits, cache = model.decode_step(params, st["cur"], cache)
+            logits, cache = step_fn(params, st["cur"], cache)
             nxt = sample(logits, step_key, sp)
             emitted = st["active"]
             remaining = st["remaining"] - emitted.astype(jnp.int32)
+            active = emitted & (remaining > 0)
+            if paged:
+                from repro.engine.paged import BSTATE_KEYS, release_slots
+                bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
+                                       emitted & ~active)
+                cache = {**cache, **bstate}
             st = {"cur": nxt[:, None],
-                  "active": emitted & (remaining > 0),
+                  "active": active,
                   "remaining": remaining}
             return (st, cache), (nxt, emitted)
 

@@ -25,6 +25,18 @@ def _auto(n: int) -> dict:
     return {"axis_types": (axis_type.Auto,) * n}
 
 
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for jitted code, tolerant of the
+    API churn across jax versions: ``jax.set_mesh`` (explicit-sharding era),
+    ``jax.sharding.use_mesh`` (transition releases), or the Mesh's own
+    context manager (jax <= 0.4.x)."""
+    setter = (getattr(jax, "set_mesh", None)
+              or getattr(jax.sharding, "use_mesh", None))
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

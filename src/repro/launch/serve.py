@@ -104,6 +104,15 @@ def main() -> None:
     ap.add_argument("--mesh", type=int, default=0, metavar="MP",
                     help="serve sharded over a host mesh with "
                          "model-parallel size MP (0 = unsharded)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: global block pool + per-slot "
+                         "block tables (memory proportional to live "
+                         "tokens, not slots * cache_len)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="tokens per KV block (with --paged)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="KV pool size in blocks; 0 = capacity parity "
+                         "with the contiguous cache (with --paged)")
     ap.add_argument("--daq", action="store_true",
                     help="serve fp8-quantized weights (repro.quantize)")
     ap.add_argument("--metric", default="sign")
@@ -157,16 +166,20 @@ def main() -> None:
                             if args.temperature > 0 else 1.0,
                             top_k=args.top_k)
     eng = Engine(model, params, slots=args.batch, cache_len=cache_len,
-                 k_steps=args.k_steps, sampling=sp, mesh=mesh)
+                 k_steps=args.k_steps, sampling=sp, mesh=mesh,
+                 paged=args.paged, block_size=args.block_size,
+                 num_blocks=args.num_blocks)
 
     t0 = time.time()
     outs, stats = eng.serve(prompts, gen_tokens=args.gen, return_stats=True)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
+    kind = "paged" if args.paged else "contiguous"
     print(f"served {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s; {stats['host_syncs']} host syncs, "
           f"{stats['dispatches']} dispatches of {args.k_steps} steps, "
-          f"{stats['prefill_calls']} prefill calls)")
+          f"{stats['prefill_calls']} prefill calls; {kind} cache, "
+          f"{stats['cache_bytes']} cache bytes)")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o}")
 

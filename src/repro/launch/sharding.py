@@ -180,8 +180,10 @@ def opt_state_shardings(opt_shape: Any, params_shape: Any, cfg: ModelConfig,
         parts = name.split("/")
         if parts[0] == "step":
             return NamedSharding(mesh, P())
-        pkey = "/".join(parts[1:-1])
-        field = parts[-1]
+        if parts[0] == "master":              # fp32 master copy: param spec
+            pkey = "/".join(parts[1:])
+        else:
+            pkey = "/".join(parts[1:-1])
         base = specs[pkey]
         p_shape = None
         for pp, ll in p_flat:
@@ -235,6 +237,17 @@ def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh) -> Any:
         if name == "lengths":
             dp = _dp(mesh, leaf.shape[0])
             return NamedSharding(mesh, P(dp))
+        from repro.engine.paged import BSTATE_KEYS
+        if name in BSTATE_KEYS:
+            # paged-cache allocator state: tiny int/bool arrays, replicated
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        if name in ("pk", "pv"):              # [n, NB+1, bs, Kv_eff, hd]
+            # block pool: same head-axis layout as the dense cache; the
+            # block axis is shared by every slot, so it replicates over dp
+            kv_tp = leaf.shape[3] % msz == 0
+            spec = P(None, None, None, "model" if kv_tp else None, None)
+            return NamedSharding(
+                mesh, P(*_fit(tuple(spec), tuple(leaf.shape), mesh)))
         dp = _dp(mesh, leaf.shape[1])
         if name in ("k", "v", "mk", "mv"):    # [n, B, S, Kv_eff, hd]
             kv_tp = leaf.shape[3] % msz == 0  # repeat-sharded layout (lm.py)

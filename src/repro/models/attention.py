@@ -161,6 +161,36 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window: int = 0,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def write_paged_kv(pk, pv, k_new, v_new, wblk, woff):
+    """Scatter one new kv [B,1,Kv,hd] into the block pools at each slot's
+    write target (block id ``wblk[b]``, in-block offset ``woff[b]`` —
+    computed once per step by ``engine.paged.alloc_step``; inactive slots
+    point at the trash block)."""
+    pk = pk.at[wblk, woff].set(k_new[:, 0].astype(pk.dtype))
+    pv = pv.at[wblk, woff].set(v_new[:, 0].astype(pv.dtype))
+    return pk, pv
+
+
+def paged_decode_attention(q, pk, pv, tbl, lengths, *, sliding_window=0,
+                           softcap=0.0) -> jnp.ndarray:
+    """Decode attention against paged K/V pools.
+
+    q [B,1,H,hd]; pools [NB+1, bs, Kv, hd]; ``tbl`` [B, MB] block table.
+    The gather reproduces the dense cache layout (linear positions, or ring
+    positions when the table spans exactly the sliding window) so this is
+    value-identical to :func:`decode_attention` on a contiguous cache.
+    """
+    from repro.engine.paged import gather_blocks
+    gk = gather_blocks(pk, tbl)
+    gv = gather_blocks(pv, tbl)
+    cap = gk.shape[1]
+    if sliding_window and cap == sliding_window:   # ring layout
+        eff_len = jnp.minimum(lengths + 1, cap)
+        return decode_attention(q, gk, gv, eff_len, softcap=softcap)
+    return decode_attention(q, gk, gv, lengths + 1, window=sliding_window,
+                            softcap=softcap)
+
+
 # ---------------------------------------------------------------------------
 # Layer-level wrappers
 # ---------------------------------------------------------------------------

@@ -181,6 +181,23 @@ def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
     raise ValueError(mixer)
 
 
+def init_layer_cache_paged(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                           num_blocks: int, block_size: int) -> dict:
+    """Paged decode cache for one layer: attention K/V become global block
+    pools ``pk``/``pv`` ``[num_blocks + 1, bs, Kv, hd]`` (the last block is
+    the trash sink — engine/paged.py); SSM state has no sequence axis to
+    page and stays per-slot dense."""
+    mixer, _ = spec
+    Kv, hd = _kv_eff(cfg), cfg.resolved_head_dim
+    cdt = _cache_dtype()
+    if mixer in ("attn", "enc_attn"):
+        return {"pk": jnp.zeros((num_blocks + 1, block_size, Kv, hd), cdt),
+                "pv": jnp.zeros((num_blocks + 1, block_size, Kv, hd), cdt)}
+    if mixer == "mamba":
+        return SSM.init_mamba_cache(cfg, batch)
+    raise ValueError(f"paged cache not supported for mixer {mixer!r}")
+
+
 def _ring_write(cache_k, cache_v, k_new, v_new, lengths):
     """Write one kv into a ring cache at slot lengths % capacity."""
     cap = cache_k.shape[1]
@@ -219,6 +236,60 @@ def _attn_decode(p, x, cache, lengths, cfg: ModelConfig):
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = ck, cv
     return y, new_cache
+
+
+def _attn_decode_paged(p, x, cache, pctx, cfg: ModelConfig):
+    """Self-attn decode against the paged block pool.
+
+    Mirrors :func:`_attn_decode` exactly for active slots: the new K/V lands
+    at the slot's write target (``pctx["wblk"]/["woff"]``, precomputed once
+    per step — trash block for inactive slots), and attention runs over the
+    block-table gather, which reproduces the dense cache layout (linear
+    positions, or ring positions for SWA) value-for-value."""
+    B = x.shape[0]
+    lengths = pctx["lengths"]
+    q, k, v = A.qkv_proj(p, x, cfg)
+    if cfg.rope_theta > 0:
+        cos, sin = A.rope_cos_sin(lengths[:, None], cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+        q = A.apply_rope(q, cos, sin)
+        k = A.apply_rope(k, cos, sin)
+    r = _kv_eff(cfg) // cfg.n_kv_heads
+    if r > 1:  # repeat-sharded cache (see _kv_eff)
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    pk, pv = A.write_paged_kv(cache["pk"], cache["pv"], k, v,
+                              pctx["wblk"], pctx["woff"])
+    out = A.paged_decode_attention(q, pk, pv, pctx["tbl"], lengths,
+                                   sliding_window=cfg.sliding_window,
+                                   softcap=cfg.attn_logit_softcap)
+    from repro.quant_runtime import qlinear
+    y = qlinear.matmul(out.reshape(B, 1, -1), p["wo"])
+    return y, {**cache, "pk": pk, "pv": pv}
+
+
+def apply_layer_decode_paged(p: dict, x, cache: dict, pctx: dict,
+                             cfg: ModelConfig, spec: LayerSpec):
+    """Paged variant of :func:`apply_layer_decode`; Mamba/SSM layers keep
+    their contiguous per-slot state and are routed around the pool."""
+    mixer, ffn = spec
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    if mixer in ("attn", "enc_attn"):
+        y, cache = _attn_decode_paged(p["attn"], h, cache, pctx, cfg)
+        x = x + y
+    elif mixer == "mamba":
+        y, cache = SSM.mamba_decode(p["mamba"], h, cache, cfg)
+        x = x + y
+    else:
+        raise ValueError(f"paged decode not supported for mixer {mixer!r}")
+    if ffn != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = MOE.apply_moe(p["moe"], h2, cfg)
+            x = x + y
+        else:
+            x = x + apply_mlp(p["mlp"], h2)
+    return x, cache
 
 
 def apply_layer_decode(p: dict, x, cache: dict, lengths, cfg: ModelConfig,
@@ -377,6 +448,22 @@ def run_stack_decode(stack, cache, x, lengths, cfg, specs):
     return x, new_cache
 
 
+def run_stack_decode_paged(stack, cache, x, pctx, cfg, specs):
+    """Paged decode scan: the write targets / block table in ``pctx`` are
+    shared by every layer (all layers advance in lockstep), so they ride
+    the closure instead of the scanned xs."""
+    def body(h, xs):
+        lp, lc = xs
+        nc = {}
+        for i, spec in enumerate(specs):
+            h, nci = apply_layer_decode_paged(lp[f"L{i}"], h, lc[f"L{i}"],
+                                              pctx, cfg, spec)
+            nc[f"L{i}"] = nci
+        return h, nc
+    x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    return x, new_cache
+
+
 def run_stack_prefill(stack, x, cfg, specs, *, memory=None, cache_len=0):
     def body(h, lp):
         caches = {}
@@ -391,6 +478,13 @@ def run_stack_prefill(stack, x, cfg, specs, *, memory=None, cache_len=0):
 
 def _stack_cache(cfg, specs, n, batch, cache_len, mem_len=0):
     one = {f"L{i}": init_layer_cache(cfg, specs[i], batch, cache_len, mem_len)
+           for i in range(len(specs))}
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), one)
+
+
+def _stack_cache_paged(cfg, specs, n, batch, num_blocks, block_size):
+    one = {f"L{i}": init_layer_cache_paged(cfg, specs[i], batch, num_blocks,
+                                           block_size)
            for i in range(len(specs))}
     return jax.tree.map(lambda l: jnp.broadcast_to(l, (n,) + l.shape), one)
 
@@ -410,6 +504,12 @@ class Model:
                                  #   marks per-row true lengths of a
                                  #   right-padded batch (engine prefill)
     decode_step: Callable        # (params, tokens, cache) -> (logits, cache)
+    init_paged_cache: Callable | None = None
+                                 # (batch, cache_len, block_size=,
+                                 #  num_blocks=) -> paged cache
+    decode_step_paged: Callable | None = None
+                                 # (params, tokens, paged cache) ->
+                                 #   (logits, paged cache)
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -500,7 +600,77 @@ def build_model(cfg: ModelConfig) -> Model:
         new_cache["lengths"] = lengths + 1
         return logits, new_cache
 
-    return Model(cfg, init, loss_fn, init_cache, prefill, decode_step)
+    # first attention position in the period (None for pure-SSM stacks);
+    # families with a prefix stack (moe first_k_dense) always have attn in
+    # the period too, so the stack leaf is a sufficient geometry probe
+    _attn_idx = next((i for i, s in enumerate(specs)
+                      if s[0] in ("attn", "enc_attn")), None)
+
+    def init_paged_cache(batch, cache_len, *, block_size: int,
+                         num_blocks: int):
+        """Paged decode cache: block pools + shared table + free-list.
+
+        SWA stacks page the *ring* (capacity = window), so ``cache_len``
+        must cover the window and ``block_size`` must divide it — otherwise
+        ring positions (``pos % window``) would straddle the block grid.
+        """
+        from repro.engine.paged import init_block_state
+        window = cfg.sliding_window
+        if window:
+            if cache_len < window:
+                raise ValueError(
+                    f"paged SWA cache needs cache_len >= sliding_window "
+                    f"({cache_len} < {window})")
+            if window % block_size:
+                raise ValueError(
+                    f"block_size {block_size} must divide the sliding "
+                    f"window {window} (ring positions are block-mapped)")
+            mb = window // block_size
+        else:
+            mb = -(-cache_len // block_size)
+        c = {"stack": _stack_cache_paged(cfg, specs, n_periods, batch,
+                                         num_blocks, block_size),
+             "lengths": jnp.zeros((batch,), jnp.int32),
+             **init_block_state(batch, mb, num_blocks)}
+        if n_prefix:
+            c["prefix"] = _stack_cache_paged(cfg, prefix_specs, n_prefix,
+                                             batch, num_blocks, block_size)
+        return c
+
+    def decode_step_paged(params, tokens, pcache):
+        """tokens [B, 1] -> (logits [B, V], new paged cache).  Block
+        allocation and write targets are computed once per step and shared
+        by every attention layer (the stack advances in lockstep)."""
+        from repro.engine.paged import BSTATE_KEYS, alloc_step
+        x = embed_tokens(params["embed"], tokens)
+        lengths = pcache["lengths"]
+        new_cache = dict(pcache)
+        if _attn_idx is not None:
+            leaf = pcache["stack"][f"L{_attn_idx}"]["pk"]
+            bs = leaf.shape[2]
+            cap = pcache["tbl"].shape[1] * bs
+            ring = bool(cfg.sliding_window) and cap == cfg.sliding_window
+            bstate = {k: pcache[k] for k in BSTATE_KEYS}
+            bstate, wblk, woff = alloc_step(bstate, lengths, bs, cap, ring)
+            pctx = {"lengths": lengths, "tbl": bstate["tbl"],
+                    "wblk": wblk, "woff": woff}
+            new_cache.update(bstate)
+        else:  # pure-SSM stack: contiguous state, no pools to manage
+            pctx = {"lengths": lengths}
+        if n_prefix:
+            x, new_cache["prefix"] = run_stack_decode_paged(
+                params["prefix"], pcache["prefix"], x, pctx, cfg,
+                prefix_specs)
+        x, new_cache["stack"] = run_stack_decode_paged(
+            params["stack"], pcache["stack"], x, pctx, cfg, specs)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x)[:, 0]
+        new_cache["lengths"] = lengths + 1
+        return logits, new_cache
+
+    return Model(cfg, init, loss_fn, init_cache, prefill, decode_step,
+                 init_paged_cache=init_paged_cache,
+                 decode_step_paged=decode_step_paged)
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,11 @@ def lr_schedule(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def init_opt_state(params: Any, tc: TrainConfig) -> dict:
+    """Moments (+ step) and, for non-fp32 parameter trees, an fp32 master
+    copy: low-precision params round away updates near their resolution
+    floor (bf16 has ~3 significant digits — an lr*1e-3 update against an
+    O(0.1) weight is half rounding error), so the update accumulates in the
+    master and params are just its cast."""
     int8 = tc.opt_state_dtype == "int8"
 
     def leaf_state(p):
@@ -82,8 +87,12 @@ def init_opt_state(params: Any, tc: TrainConfig) -> dict:
         dt = jnp.dtype(tc.opt_state_dtype)
         return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
 
-    return {"mu": jax.tree.map(leaf_state, params),
-            "step": jnp.zeros((), jnp.int32)}
+    state = {"mu": jax.tree.map(leaf_state, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if any(l.dtype != jnp.float32 for l in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
 
 
 def global_norm(tree: Any) -> jnp.ndarray:
@@ -104,7 +113,7 @@ def adamw_update(params: Any, grads: Any, opt_state: dict, tc: TrainConfig):
     bc2 = 1.0 - b2 ** step.astype(jnp.float32)
     int8 = tc.opt_state_dtype == "int8"
 
-    def leaf_update(p, g, s):
+    def leaf_update(p, g, s, mw):
         g = g.astype(jnp.float32) * clip
         if int8:
             m = _dq8(s["m"], s["m_scale"], p.shape)
@@ -119,8 +128,8 @@ def adamw_update(params: Any, grads: Any, opt_state: dict, tc: TrainConfig):
         v = b2 * v + (1.0 - b2) * g * g
         upd = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
         wd = tc.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
-        new_p = (p.astype(jnp.float32) - lr * (upd + wd * p.astype(jnp.float32))
-                 ).astype(p.dtype)
+        base = p.astype(jnp.float32) if mw is None else mw
+        new_w = base - lr * (upd + wd * base)
         if int8:
             qm, sm = _q8(m)
             qv, sv = _q8(jnp.sqrt(v))
@@ -128,13 +137,21 @@ def adamw_update(params: Any, grads: Any, opt_state: dict, tc: TrainConfig):
         else:
             dt = s["m"].dtype
             new_s = {"m": m.astype(dt), "v": v.astype(dt)}
-        return new_p, new_s
+        return new_w.astype(p.dtype), new_s, new_w
 
+    master = opt_state.get("master")
     flat_p, treedef = jax.tree_util.tree_flatten(params)
     flat_g = jax.tree.leaves(grads)
     flat_s = treedef.flatten_up_to(opt_state["mu"])
-    out = [leaf_update(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    flat_mw = (treedef.flatten_up_to(master) if master is not None
+               else [None] * len(flat_p))
+    out = [leaf_update(p, g, s, mw)
+           for p, g, s, mw in zip(flat_p, flat_g, flat_s, flat_mw)]
     new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
     new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_state = {"mu": new_mu, "step": step}
+    if master is not None:
+        new_state["master"] = jax.tree_util.tree_unflatten(
+            treedef, [o[2] for o in out])
     stats = {"lr": lr, "grad_norm": gnorm}
-    return new_params, {"mu": new_mu, "step": step}, stats
+    return new_params, new_state, stats

@@ -81,7 +81,7 @@ import sys; sys.path.insert(0, "src")
 import jax
 from repro.configs import TrainConfig, get_arch, reduced, ShapeConfig
 from repro.launch import sharding as SH
-from repro.launch.mesh import _auto
+from repro.launch.mesh import _auto, use_mesh
 from repro.launch.steps import make_train_step
 from repro.launch.specs import train_batch_specs, state_specs
 from repro.models import build_model
@@ -89,7 +89,7 @@ from repro.models import build_model
 cfg = reduced(get_arch("glm4-9b"))
 model = build_model(cfg)
 tc = TrainConfig()
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=_auto(2))
+mesh = jax.make_mesh((4, 2), ("data", "model"), **_auto(2))
 state = state_specs(model, tc)
 shape = ShapeConfig("mini", 64, 8, "train")
 batch = train_batch_specs(cfg, shape)
@@ -98,7 +98,7 @@ st_sh = {"params": SH.params_shardings(state["params"], cfg, mesh),
                                        mesh)}
 b_sh = SH.batch_shardings(batch, mesh)
 step = make_train_step(model, tc)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     compiled = jax.jit(step, in_shardings=(st_sh, b_sh),
                        out_shardings=(st_sh, None),
                        donate_argnums=0).lower(state, batch).compile()
