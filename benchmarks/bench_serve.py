@@ -1,6 +1,6 @@
-"""Serving bench: legacy host loop vs contiguous engine vs paged engine.
+"""Serving bench: legacy host loop vs contiguous vs paged vs paged+prefix.
 
-Two workloads, each run greedy and parity-checked token-for-token:
+Four workloads, each run greedy and parity-checked token-for-token:
 
 * **uniform** — every request has the same prompt length (the contiguous
   cache's best case).  Races the legacy host-scheduled loop against the
@@ -12,6 +12,14 @@ Two workloads, each run greedy and parity-checked token-for-token:
   the workload's actual concurrent need (sum of the ``slots`` largest
   per-request reservations), so ``cache_bytes`` drops roughly by the
   longest/typical length ratio while outputs stay token-exact.
+* **shared-prefix** — requests share a long common system prompt (the
+  production shape).  Contiguous vs paged vs paged+prefix-cache: the
+  prefix engine prefills strictly fewer prompt tokens (matched blocks are
+  mapped, not recomputed) at token-exact outputs; ``prefill_tokens`` is
+  the headline column.
+* **longprompt** — a long-prompt request arrives while short requests
+  decode (the chunked-prefill motivation): paged one-shot admission vs
+  paged+chunked, tok/s and prefill tokens recorded.
 
   PYTHONPATH=src python -m benchmarks.bench_serve [--gen 24 --k-steps 8 ...]
   PYTHONPATH=src python -m benchmarks.run serve     # same, CSV + JSON
@@ -26,6 +34,7 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.configs import get_arch, reduced
@@ -54,6 +63,7 @@ def _row(dt, stats):
             "host_syncs": stats["host_syncs"],
             "host_syncs_per_token": stats["host_syncs"] / tok,
             "prefill_calls": stats["prefill_calls"],
+            "prefill_tokens": stats.get("prefill_tokens", 0),
             "dispatches": stats["dispatches"],
             "cache_bytes": stats.get("cache_bytes", 0)}
 
@@ -125,6 +135,75 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
         print("bench_serve: WARNING: paged outputs differ on the mixed "
               "workload (greedy parity violated)", flush=True)
 
+    # ---- shared-system-prompt workload -------------------------------------
+    # 16 requests sharing a long common prefix (production traffic shape):
+    # the prefix cache maps matched blocks instead of recomputing them, so
+    # prefill_tokens is the headline column (tok/s on CPU mostly tracks the
+    # decode dispatches, which are identical).
+    px_requests = max(16, requests)
+    px_len = prompt_len * 8                    # e.g. 128-token system prompt
+    tail_len = max(4, prompt_len // 2)
+    common = sample_batch(jax.random.PRNGKey(777), spec, 1, px_len)[0]
+    shared_reqs = [jnp.concatenate([
+        common, sample_batch(jax.random.PRNGKey(800 + i), spec, 1,
+                             tail_len)[0]]) for i in range(px_requests)]
+    px_cache_len = int(shared_reqs[0].shape[0]) + gen + 8
+
+    sx_eng = Engine(model, params, slots=batch, cache_len=px_cache_len,
+                    k_steps=k_steps)
+    sx_paged = Engine(model, params, slots=batch, cache_len=px_cache_len,
+                      k_steps=k_steps, paged=True, block_size=block_size)
+    sx_prefix = Engine(model, params, slots=batch, cache_len=px_cache_len,
+                       k_steps=k_steps, paged=True, block_size=block_size,
+                       prefix_cache=True, chunk_size=4 * block_size)
+    sraced = _race({
+        "engine": lambda: sx_eng.serve(shared_reqs, gen_tokens=gen,
+                                       return_stats=True),
+        "paged": lambda: sx_paged.serve(shared_reqs, gen_tokens=gen,
+                                        return_stats=True),
+        "prefix": lambda: sx_prefix.serve(shared_reqs, gen_tokens=gen,
+                                          return_stats=True),
+    })
+    (sx_eng_outs, sx_eng_stats), sx_eng_dt = sraced["engine"]
+    (sx_pag_outs, sx_pag_stats), sx_pag_dt = sraced["paged"]
+    (sx_pfx_outs, sx_pfx_stats), sx_pfx_dt = sraced["prefix"]
+    shared_parity = (sx_pag_outs == sx_eng_outs
+                     and sx_pfx_outs == sx_eng_outs)
+    if not shared_parity:
+        print("bench_serve: WARNING: shared-prefix outputs differ (greedy "
+              "parity violated)", flush=True)
+    assert sx_pfx_stats["prefill_tokens"] < sx_pag_stats["prefill_tokens"], \
+        "prefix cache must prefill strictly fewer tokens"
+
+    # ---- long-prompt + decode mix (chunked prefill) ------------------------
+    lp_lens = [px_len if i == 0 else prompt_len
+               for i in range(max(8, requests))]
+    lp_reqs = [sample_batch(jax.random.PRNGKey(900 + i), spec, 1, L)[0]
+               for i, L in enumerate(lp_lens)]
+    lp_cache_len = px_len + gen + 9            # fits the long prompt
+    lp_eng = Engine(model, params, slots=batch, cache_len=lp_cache_len,
+                    k_steps=k_steps)
+    lp_paged = Engine(model, params, slots=batch, cache_len=lp_cache_len,
+                      k_steps=k_steps, paged=True, block_size=block_size)
+    lp_chunk = Engine(model, params, slots=batch, cache_len=lp_cache_len,
+                      k_steps=k_steps, paged=True, block_size=block_size,
+                      chunk_size=2 * block_size)
+    lraced = _race({
+        "engine": lambda: lp_eng.serve(lp_reqs, gen_tokens=gen,
+                                       return_stats=True),
+        "paged": lambda: lp_paged.serve(lp_reqs, gen_tokens=gen,
+                                        return_stats=True),
+        "chunked": lambda: lp_chunk.serve(lp_reqs, gen_tokens=gen,
+                                          return_stats=True),
+    })
+    (lp_eng_outs, lp_eng_stats), lp_eng_dt = lraced["engine"]
+    (lp_pag_outs, lp_pag_stats), lp_pag_dt = lraced["paged"]
+    (lp_chk_outs, lp_chk_stats), lp_chk_dt = lraced["chunked"]
+    lp_parity = (lp_pag_outs == lp_eng_outs and lp_chk_outs == lp_eng_outs)
+    if not lp_parity:
+        print("bench_serve: WARNING: long-prompt outputs differ (greedy "
+              "parity violated)", flush=True)
+
     result = {
         "workload": {"arch": arch, "requests": requests, "batch": batch,
                      "prompt_len": prompt_len, "gen": gen,
@@ -139,6 +218,25 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
             "num_blocks": num_blocks,
             "engine": _row(m_eng_dt, m_eng_stats),
             "paged": _row(m_pag_dt, m_pag_stats),
+        },
+        "shared_prefix": {
+            "requests": px_requests,
+            "prefix_len": px_len,
+            "tail_len": tail_len,
+            "greedy_parity": shared_parity,
+            "engine": _row(sx_eng_dt, sx_eng_stats),
+            "paged": _row(sx_pag_dt, sx_pag_stats),
+            "prefix": {**_row(sx_pfx_dt, sx_pfx_stats),
+                       "prefix_hits": sx_pfx_stats.get("prefix_hits", 0),
+                       "prefix_evictions":
+                           sx_pfx_stats.get("prefix_evictions", 0)},
+        },
+        "longprompt": {
+            "prompt_lens": lp_lens,
+            "greedy_parity": lp_parity,
+            "engine": _row(lp_eng_dt, lp_eng_stats),
+            "paged": _row(lp_pag_dt, lp_pag_stats),
+            "chunked": _row(lp_chk_dt, lp_chk_stats),
         },
     }
     result["speedup"] = (result["engine"]["tok_per_s"]
@@ -168,6 +266,24 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
          f"cache_bytes={result['mixed']['paged']['cache_bytes']}")
     emit("serve.mixed.cache_ratio", 0,
          f"paged/contig={result['mixed']['cache_bytes_ratio']:.3f}")
+    sx = result["shared_prefix"]
+    sx["prefill_tokens_ratio"] = (sx["prefix"]["prefill_tokens"]
+                                  / max(sx["paged"]["prefill_tokens"], 1))
+    emit("serve.shared.paged", sx_pag_dt * 1e6,
+         f"tok_per_s={sx['paged']['tok_per_s']:.1f};"
+         f"prefill_tokens={sx['paged']['prefill_tokens']}")
+    emit("serve.shared.prefix", sx_pfx_dt * 1e6,
+         f"tok_per_s={sx['prefix']['tok_per_s']:.1f};"
+         f"prefill_tokens={sx['prefix']['prefill_tokens']};"
+         f"hits={sx['prefix']['prefix_hits']}")
+    emit("serve.shared.prefill_ratio", 0,
+         f"prefix/paged={sx['prefill_tokens_ratio']:.3f}")
+    lp = result["longprompt"]
+    emit("serve.longprompt.paged", lp_pag_dt * 1e6,
+         f"tok_per_s={lp['paged']['tok_per_s']:.1f}")
+    emit("serve.longprompt.chunked", lp_chk_dt * 1e6,
+         f"tok_per_s={lp['chunked']['tok_per_s']:.1f};"
+         f"prefill_tokens={lp['chunked']['prefill_tokens']}")
     return result
 
 

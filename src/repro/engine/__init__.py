@@ -9,15 +9,19 @@ real sampling, opt-in sharded serving).
     outputs = eng.serve(requests, gen_tokens=64)
 
 See engine.py (host/device split), scheduler.py (slot state + K-step
-dispatch), paged.py (paged KV cache: block pool, block tables, device
-free-list — ``Engine(..., paged=True)``), sampler.py (greedy / temperature
-/ top-k), legacy.py (the old host-driven loop, kept as benchmark baseline).
+dispatch, in-scan chunked prefill), paged.py (paged KV cache: block pool,
+block tables, device free-list, refcounted sharing + copy-on-write —
+``Engine(..., paged=True)``), prefix.py (host chained-hash prompt-block
+index — ``Engine(..., paged=True, prefix_cache=True)``), sampler.py
+(greedy / temperature / top-k), legacy.py (the old host-driven loop, kept
+as benchmark baseline).
 """
 from repro.engine.engine import Engine, EngineConfig
 from repro.engine.legacy import serve_host_loop, single_slot_prefill
-from repro.engine.paged import (alloc_admit, alloc_step, blocks_for,
-                                gather_blocks, init_block_state,
-                                release_slots)
+from repro.engine.paged import (admit_slot, alloc_admit, alloc_step,
+                                blocks_for, gather_blocks, init_block_state,
+                                release_refs, release_slots, span_targets)
+from repro.engine.prefix import PrefixIndex, chain_hashes
 from repro.engine.sampler import SamplingParams, sample
 from repro.engine.scheduler import (init_slot_state, make_decode_dispatch,
                                     make_decode_step)
@@ -26,6 +30,7 @@ __all__ = [
     "Engine", "EngineConfig", "SamplingParams", "sample",
     "init_slot_state", "make_decode_dispatch", "make_decode_step",
     "serve_host_loop", "single_slot_prefill",
-    "alloc_admit", "alloc_step", "blocks_for", "gather_blocks",
-    "init_block_state", "release_slots",
+    "admit_slot", "alloc_admit", "alloc_step", "blocks_for",
+    "gather_blocks", "init_block_state", "release_refs", "release_slots",
+    "span_targets", "PrefixIndex", "chain_hashes",
 ]

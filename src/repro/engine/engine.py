@@ -28,6 +28,32 @@ no extra syncs); everything per-token lives on device:
   case against the pool (FIFO; requests wait when the head doesn't fit),
   and blocks recycle inside the K-step scan as slots drain.  Greedy
   outputs stay token-exact vs the contiguous cache.
+* **chunked prefill** — ``chunk_size > 0`` (paged only) moves prompt
+  prefill *into* the decode dispatch: admission just maps blocks and arms
+  the slot's prompt buffer, and each scan step prefills one
+  ``chunk_size``-token piece alongside the other slots' decode step
+  (scheduler.py), so long prompts stream instead of stalling decode.
+  Chunk pieces are bit-exact vs one-shot prefill (same flash tile math
+  with offset masks, SSD state threaded on the ``ssm_chunk`` grid, same-
+  dtype cache reads) with one carve-out: capacity-routed MoE is run
+  **dropless** inside chunks — GShard's round-major queue positions are
+  non-causal (a token's 2nd-choice position depends on later tokens' 1st
+  choices), so one-shot *drop* decisions cannot be reproduced from a
+  chunk's worth of tokens; outputs match exactly whenever the one-shot
+  path doesn't overflow an expert queue.
+* **prefix caching** — ``prefix_cache=True`` (implies chunked prefill)
+  shares full prompt blocks across requests: a host-side chained-hash
+  index (engine/prefix.py) maps matched leading blocks into the new slot's
+  table with ``refcount += 1`` and only the unmatched tail is prefilled;
+  released blocks stay cached (the index holds one reference) until LRU
+  eviction makes room.  A partially-matched last block is mapped shared
+  and copy-on-write protected: the first decode write pops a private copy.
+  The reservation ledger counts only non-shared blocks, so a warm cache
+  admits more concurrency from the same pool.  Sharing is content-sound
+  for causal attention stacks without position-keyed ring caches or
+  recurrent state; SWA / SSM / hybrid configs run with matching disabled
+  (the chunked machinery still applies, outputs stay exact, nothing is
+  shared).
 
 Right-padded prefill is only exact when a row's hidden states cannot depend
 on positions after it or on other tokens' presence: pure causal attention
@@ -43,8 +69,10 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.engine import paged as P
+from repro.engine.prefix import PrefixIndex
 from repro.engine.sampler import SamplingParams, sample
 from repro.engine.scheduler import init_slot_state, make_decode_dispatch
 from repro.models.lm import Model
@@ -63,6 +91,12 @@ class EngineConfig:
     block_size: int = 16    # tokens per KV block (paged only)
     num_blocks: int = 0     # pool size; 0 -> slots * ceil(cap / block_size)
                             # (capacity parity with the contiguous cache)
+    chunk_size: int = 0     # >0: chunked prefill inside the decode dispatch
+                            # (paged only; tokens per in-scan prefill piece)
+    prefix_cache: bool = False  # refcounted prompt-block sharing (paged;
+                                # implies chunked prefill)
+    check_invariants: bool = False  # assert allocator conservation after
+                                    # every admission/dispatch (tests; slow)
 
 
 class Engine:
@@ -78,6 +112,9 @@ class Engine:
             raise NotImplementedError(
                 "Engine drives LM-style models; vlm/encdec need modality "
                 "inputs (see examples/)")
+        if cfg.prefix_cache and not cfg.chunk_size:
+            cfg = EngineConfig(**{**cfg.__dict__,
+                                  "chunk_size": 4 * cfg.block_size})
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
@@ -93,6 +130,8 @@ class Engine:
         sp, K = cfg.sampling, cfg.k_steps
         if K < 1:
             raise ValueError(f"k_steps must be >= 1, got {K}")
+        if (cfg.chunk_size or cfg.prefix_cache) and not cfg.paged:
+            raise ValueError("chunk_size / prefix_cache need paged=True")
         if cfg.paged:
             window = mcfg.sliding_window
             cap = min(cfg.cache_len, window) if window else cfg.cache_len
@@ -102,9 +141,37 @@ class Engine:
                     f"({cfg.cache_len} < {window})")
             self._mb = P.blocks_for(cap, cfg.block_size)  # blocks per slot
             self._num_blocks = cfg.num_blocks or cfg.slots * self._mb
+        if cfg.chunk_size:
+            if (mcfg.family in ("ssm", "hybrid")
+                    and cfg.chunk_size % mcfg.ssm_chunk):
+                raise ValueError(
+                    f"chunked prefill over SSM state is bit-exact only on "
+                    f"the SSD chunk grid: chunk_size {cfg.chunk_size} must "
+                    f"be a multiple of ssm_chunk {mcfg.ssm_chunk}")
+            # prompt-block sharing is content-sound only when a block's KV
+            # is a pure function of the token prefix: ring caches are
+            # position-keyed (mod window) and SSM state is recurrent, so
+            # those families run chunked but unshared
+            self._can_match = (cfg.prefix_cache
+                               and mcfg.family in ("dense", "moe")
+                               and not mcfg.sliding_window)
+            self._index = PrefixIndex(cfg.block_size)
+            self._hold_blocks: set[int] = set()   # index + pending holds
+            self._pcache = None                   # persistent cache/state
+            self._pstate = None
         self._dispatch = jax.jit(
-            make_decode_dispatch(model, sp, K, paged=cfg.paged),
+            make_decode_dispatch(model, sp, K, paged=cfg.paged,
+                                 cow=cfg.prefix_cache),
             donate_argnums=(1, 2))
+        if cfg.chunk_size:
+            self._dispatch_chunk = jax.jit(
+                make_decode_dispatch(model, sp, K, paged=True,
+                                     cow=cfg.prefix_cache,
+                                     chunk=cfg.chunk_size),
+                donate_argnums=(1, 2))
+            self._admit_chunk = jax.jit(self._admit_chunk_impl,
+                                        donate_argnums=(0, 1))
+            self._evict = jax.jit(self._evict_impl, donate_argnums=(0,))
         self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
         self._scatter_paged = jax.jit(self._scatter_paged_impl,
                                       donate_argnums=(0, 1))
@@ -153,6 +220,7 @@ class Engine:
         new["lengths"] = cache["lengths"].at[slots].set(
             part_cache["lengths"])
         state = {
+            **state,
             "cur": state["cur"].at[slots, 0].set(first),
             "active": state["active"].at[slots].set(remaining0 > 0),
             "remaining": state["remaining"].at[slots].set(remaining0),
@@ -215,11 +283,86 @@ class Engine:
                                           part_cache["prefix"])
         new["lengths"] = cache["lengths"].at[slots].set(lens)
         state = {
+            **state,
             "cur": state["cur"].at[slots, 0].set(first),
             "active": state["active"].at[slots].set(remaining0 > 0),
             "remaining": state["remaining"].at[slots].set(remaining0),
         }
         return new, state
+
+    # -- chunked / prefix-cached admission ----------------------------------
+
+    def _admit_chunk_impl(self, cache, state, slot, tokens, L, shared_ids,
+                          n_shared, n_new, n_retained, pf_start,
+                          shared_until, budget):
+        """Admit one request into ``slot`` for in-scan chunked prefill: no
+        model forward here — release the stale slot, map shared (prefix-hit)
+        blocks + pop fresh ones, zero the slot's recurrent state, and arm
+        the prompt buffer.  The first token is sampled inside the dispatch
+        when the last chunk lands."""
+        B = state["active"].shape[0]
+        bstate = {k: cache[k] for k in _BKEYS}
+        done = jnp.zeros((B,), bool).at[slot].set(True)
+        bstate = P.release_slots(bstate, done)
+        bstate, new_ids = P.admit_slot(bstate, slot, shared_ids, n_shared,
+                                       n_new, n_retained, self._mb)
+
+        def zero_group(group):
+            return {lk: {name: (leaf if name in ("pk", "pv")
+                                else leaf.at[:, slot].set(0))
+                         for name, leaf in lv.items()}
+                    for lk, lv in group.items()}
+
+        new = dict(cache)
+        new.update(bstate)
+        new["stack"] = zero_group(cache["stack"])
+        if "prefix" in cache:
+            new["prefix"] = zero_group(cache["prefix"])
+        new["lengths"] = cache["lengths"].at[slot].set(pf_start)
+        state = {
+            **state,
+            "active": state["active"].at[slot].set(False),
+            "remaining": state["remaining"].at[slot].set(0),
+            "prompt": state["prompt"].at[slot].set(tokens),
+            "pf_pos": state["pf_pos"].at[slot].set(pf_start),
+            "pf_len": state["pf_len"].at[slot].set(L),
+            "budget": state["budget"].at[slot].set(budget),
+            "pf_shared": state["pf_shared"].at[slot].set(shared_until),
+        }
+        return new, state, new_ids
+
+    @staticmethod
+    def _evict_impl(cache, ids):
+        bstate = P.release_refs({k: cache[k] for k in _BKEYS}, ids)
+        return {**cache, **bstate}
+
+    # -- allocator invariants (check_invariants=True) -----------------------
+
+    def _assert_invariants(self, cache) -> None:
+        """Conservation of the block pool, checked on the device truth:
+        free stack and referenced blocks partition the pool, and every
+        block's refcount equals its live table references plus the host's
+        index/pending hold."""
+        bs = jax.device_get({k: cache[k] for k in _BKEYS})
+        NB = self._num_blocks
+        n_free = int(bs["n_free"])
+        free = [int(b) for b in bs["free"][:n_free]]
+        assert len(set(free)) == n_free, "free stack holds duplicates"
+        ref = np.asarray(bs["ref"])
+        held = {b for b in range(NB) if ref[b] > 0}
+        assert not (set(free) & held), "block both free and referenced"
+        assert n_free + len(held) == NB, (
+            f"pool leak: {n_free} free + {len(held)} held != {NB}")
+        tbl = np.asarray(bs["tbl"])
+        counts = np.zeros(NB, np.int64)
+        for b in tbl[tbl >= 0].reshape(-1):
+            counts[b] += 1
+        holds = getattr(self, "_hold_blocks", set())
+        for b in range(NB):
+            expect = counts[b] + (1 if b in holds else 0)
+            assert ref[b] == expect, (
+                f"block {b}: ref {ref[b]} != tables {counts[b]} + "
+                f"hold {int(b in holds)}")
 
     def _group_cache_len(self, Lmax: int) -> int:
         """Prefill cache rows for one admitted group.  Contiguous: always
@@ -287,7 +430,8 @@ class Engine:
                 if self.mesh is not None:
                     part = self._place_cache(part)
                 cache = part
-                state = {"cur": first[:, None].astype(jnp.int32),
+                state = {**state,
+                         "cur": first[:, None].astype(jnp.int32),
                          "active": jnp.broadcast_to(rem0 > 0, (B,)),
                          "remaining": jnp.broadcast_to(rem0, (B,))}
             else:
@@ -320,10 +464,13 @@ class Engine:
         B, K = cfg.slots, cfg.k_steps
         requests = [jnp.asarray(r, jnp.int32).reshape(-1) for r in requests]
         stats = {"host_syncs": 0, "dispatches": 0, "prefill_calls": 0,
-                 "decode_steps": 0, "tokens": 0}
-        outputs: dict[int, list[int]] = {}
+                 "decode_steps": 0, "tokens": 0, "prefill_tokens": 0}
         if gen_tokens < 1 or not requests:
             return ([], stats) if return_stats else []
+        if cfg.chunk_size:
+            return self._serve_chunked(requests, gen_tokens, seed,
+                                       return_stats, stats)
+        outputs: dict[int, list[int]] = {}
 
         if cfg.paged:
             cache = model.init_paged_cache(B, cfg.cache_len,
@@ -384,6 +531,8 @@ class Engine:
                     stats["prefill_calls"] += ncalls
                     stats["host_syncs"] += ncalls
                     stats["tokens"] += len(rids)
+                    stats["prefill_tokens"] += sum(
+                        int(requests[r].shape[0]) for r in rids)
                     for s, r, t in zip(take_slots, rids, first):
                         outputs[r] = [t]
                         slot_rid[s], slot_rem[s] = r, gen_tokens - 1
@@ -401,6 +550,8 @@ class Engine:
             stats["host_syncs"] += 1
             stats["dispatches"] += 1
             stats["decode_steps"] += K
+            if cfg.paged and cfg.check_invariants:
+                self._assert_invariants(cache)
             for s in range(B):
                 r = slot_rid[s]
                 if r < 0:
@@ -413,5 +564,219 @@ class Engine:
                     slot_rid[s] = -1
                     slot_rsv[s] = 0  # device freed the blocks mid-scan
 
+        outs = [outputs[i] for i in sorted(outputs)]
+        return (outs, stats) if return_stats else outs
+
+    # -- chunked / prefix-cached serve loop ---------------------------------
+
+    def _serve_chunked(self, requests, gen_tokens, seed, return_stats,
+                       stats):
+        cfg, model = self.cfg, self.model
+        B, K, C = cfg.slots, cfg.k_steps, cfg.chunk_size
+        bs = cfg.block_size
+        pcap = cfg.cache_len
+        cap_rows = self._mb * bs if not model.cfg.sliding_window \
+            else model.cfg.sliding_window
+        persist = cfg.prefix_cache
+        for r in requests:
+            L = int(r.shape[0])
+            if L > pcap:
+                raise ValueError(
+                    f"chunked prefill streams prompts through the paged "
+                    f"cache: prompt of {L} tokens exceeds cache_len {pcap}")
+            need = self._blocks_needed(L, gen_tokens)
+            if need > self._num_blocks:
+                raise ValueError(
+                    f"request of {L} tokens needs {need} blocks but the "
+                    f"pool has {self._num_blocks}")
+
+        if persist and self._pcache is not None:
+            cache, state = self._pcache, self._pstate
+            self._pcache = self._pstate = None  # buffers are donated below
+        else:
+            cache = model.init_paged_cache(B, cfg.cache_len,
+                                           block_size=bs,
+                                           num_blocks=self._num_blocks)
+            state = init_slot_state(B, prompt_cap=pcap)
+            if self.mesh is not None:
+                cache = self._place_cache(cache)
+        stats["cache_bytes"] = sum(
+            l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
+        stats["prefix_hits"] = 0
+        stats["prefix_evictions"] = 0
+
+        key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+        queue = deque(range(len(requests)))
+        outputs: dict[int, list[int]] = {}
+        slot_rid = [-1] * B
+        slot_rem = [0] * B
+        slot_rsv = [0] * B       # slot-private worst-case blocks
+        slot_pf = [0] * B        # prompt tokens left to prefill (mirror)
+        slot_keys = [[] for _ in range(B)]   # pinned index keys per slot
+        slot_pend = [None] * B   # (tokens, first_block, ids) to register
+
+        def drop_holds(ids):
+            """Release host holds on ``ids`` (eviction / duplicate unwind);
+            padded to the pool size so the jitted release compiles once."""
+            nonlocal cache
+            arr = np.full((self._num_blocks,), -1, np.int32)
+            arr[:len(ids)] = ids
+            cache = self._evict(cache, jnp.asarray(arr))
+            self._hold_blocks.difference_update(ids)
+
+        def try_evict(want: int) -> int:
+            ids = self._index.evict(want) if self._can_match else []
+            if ids:
+                drop_holds(ids)
+                stats["prefix_evictions"] += len(ids)
+            return len(ids)
+
+        while queue or any(r >= 0 for r in slot_rid):
+            free = [s for s in range(B) if slot_rid[s] < 0]
+            while queue and free:
+                rid = queue[0]
+                prompt = requests[rid]
+                L = int(prompt.shape[0])
+                toks_np = np.asarray(prompt)
+                full, part_len = L // bs, L % bs
+                # A request's own prefix hits are pinned while it runs, so
+                # they can crowd a tight pool out of reach (e.g. a warm
+                # partial hit needing its CoW spare with every block cached
+                # and self-pinned).  With running slots we FIFO-wait; with
+                # an IDLE pool there is nothing to wait for, so each retry
+                # unpins and force-evicts (own matches included) and
+                # re-matches against the shrunken index — admission decays
+                # toward a cold prefill, which the pool-size validation
+                # guarantees fits.
+                fits = False
+                for _ in range(len(self._index) + 2):
+                    matched_ids: list[int] = []
+                    partial_id = None
+                    keys: list = []
+                    if self._can_match:  # excludes SWA/SSM/hybrid
+                        matched_ids, partial_id, keys = self._index.match(
+                            toks_np)
+                        self._index.pin(keys)
+                    matched_full = len(matched_ids)
+                    partial_hit = partial_id is not None
+                    matched_tokens = L if partial_hit else matched_full * bs
+                    pf_start = min(matched_tokens, L - 1)
+                    if model.cfg.sliding_window:
+                        n_shared, n_new, n_ret = 0, self._mb, 0
+                        shared = []
+                        slot_need, hold_need = self._mb, 0
+                    else:
+                        new_full = full - matched_full
+                        tail_new = 1 if (part_len and not partial_hit) \
+                            else 0
+                        n_new = new_full + tail_new
+                        n_shared = matched_full + (1 if partial_hit else 0)
+                        shared = matched_ids + ([partial_id] if partial_hit
+                                                else [])
+                        n_ret = new_full if self._can_match else 0
+                        lifetime = min(
+                            P.blocks_for(min(L + gen_tokens - 1, cap_rows),
+                                         bs),
+                            self._mb)
+                        decode_alloc = lifetime - P.blocks_for(L, bs)
+                        cow_extra = 1 if (partial_hit and gen_tokens > 1) \
+                            else 0
+                        slot_need = (n_new - n_ret) + decode_alloc \
+                            + cow_extra
+                        hold_need = n_ret
+                    demand = (sum(slot_rsv) + len(self._hold_blocks)
+                              + slot_need + hold_need - self._num_blocks)
+                    if demand <= 0 or try_evict(demand) >= demand:
+                        fits = True
+                        break
+                    self._index.unpin(keys)
+                    if any(r >= 0 for r in slot_rid):
+                        break   # FIFO: running slots will drain/unpin
+                    if try_evict(demand) == 0:
+                        break   # nothing cached left to reclaim
+                if not fits:
+                    break
+                s = free.pop(0)
+                queue.popleft()
+                shared_arr = np.full((self._mb,), -1, np.int32)
+                shared_arr[:len(shared)] = shared
+                cache, state, new_ids = self._admit_chunk(
+                    cache, state, jnp.int32(s),
+                    jnp.asarray(np.pad(toks_np, (0, pcap - L)), jnp.int32),
+                    jnp.int32(L), jnp.asarray(shared_arr),
+                    jnp.int32(n_shared), jnp.int32(n_new),
+                    jnp.int32(n_ret), jnp.int32(pf_start),
+                    jnp.int32(matched_tokens), jnp.int32(gen_tokens - 1))
+                slot_rid[s], slot_rem[s] = rid, gen_tokens
+                slot_rsv[s] = slot_need
+                slot_pf[s] = L - pf_start
+                slot_keys[s] = keys
+                outputs[rid] = []
+                stats["prefill_tokens"] += L - pf_start
+                stats["prefix_hits"] += pf_start   # tokens NOT recomputed
+                stats["prefill_calls"] += 1
+                if n_ret:
+                    ids = [int(i) for i in
+                           jax.device_get(new_ids)[:n_ret]]
+                    stats["host_syncs"] += 1
+                    self._hold_blocks.update(ids)
+                    slot_pend[s] = (toks_np, matched_full, ids)
+                if cfg.check_invariants:
+                    self._assert_invariants(cache)
+            if not any(r >= 0 for r in slot_rid):
+                assert not queue, "admission stalled with an idle pool"
+                continue
+
+            key, sub = jax.random.split(key)
+            dispatch = (self._dispatch_chunk if any(p > 0 for p in slot_pf)
+                        else self._dispatch)
+            state, cache, toks, emitted = dispatch(
+                self.params, state, cache, sub)
+            toks_h, em_h = jax.device_get((toks, emitted))
+            stats["host_syncs"] += 1
+            stats["dispatches"] += 1
+            stats["decode_steps"] += K
+            for s in range(B):
+                if slot_rid[s] < 0 or slot_pf[s] <= 0:
+                    continue
+                slot_pf[s] = max(0, slot_pf[s] - K * C)
+                if slot_pf[s] == 0 and slot_pend[s] is not None:
+                    # the slot's new full prompt blocks now hold real KV:
+                    # publish them to the prefix index (duplicates lose
+                    # their pre-retained hold and die with the slot)
+                    toks_np, first_block, ids = slot_pend[s]
+                    slot_pend[s] = None
+                    dups = self._index.register(toks_np, ids, first_block)
+                    if dups:
+                        drop_holds(dups)
+                        slot_rsv[s] += len(dups)
+                    dup_set = set(dups)
+                    nkeys = self._index.keys_for(toks_np,
+                                                 first_block + len(ids))
+                    reg_keys = [k for k, bid in
+                                zip(nkeys[first_block:], ids)
+                                if bid not in dup_set]
+                    self._index.pin(reg_keys)
+                    slot_keys[s] = slot_keys[s] + reg_keys
+            if cfg.check_invariants:
+                self._assert_invariants(cache)
+            for s in range(B):
+                r = slot_rid[s]
+                if r < 0:
+                    continue
+                row = [int(t) for t in toks_h[s][em_h[s]]]
+                outputs[r].extend(row)
+                stats["tokens"] += len(row)
+                slot_rem[s] -= len(row)
+                if slot_rem[s] <= 0:
+                    assert slot_pend[s] is None, \
+                        "slot finished before its prompt finished prefilling"
+                    slot_rid[s] = -1
+                    slot_rsv[s] = 0
+                    self._index.unpin(slot_keys[s])
+                    slot_keys[s] = []
+
+        if persist:
+            self._pcache, self._pstate = cache, state
         outs = [outputs[i] for i in sorted(outputs)]
         return (outs, stats) if return_stats else outs

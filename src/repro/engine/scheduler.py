@@ -13,27 +13,79 @@ prefill, just as the old loop kept feeding finished slots), ``remaining`` is
 decremented only while a slot is active, and a slot deactivates when its
 budget reaches zero.  Under greedy sampling the emitted tokens are therefore
 token-identical to the old loop.
+
+**Chunked prefill** (``chunk > 0``, paged caches only): prompt prefill rides
+*inside* the same ``lax.scan`` — each scan step runs one decode step for the
+decoding slots AND one ``chunk``-token prefill piece for the slots still in
+prefill phase (state fields ``prompt`` / ``pf_pos`` / ``pf_len``, armed by
+the engine's admission).  A long prompt therefore no longer stalls in-flight
+decode: it streams through K*chunk prompt tokens per dispatch while other
+slots keep emitting.  The step a slot's last chunk lands, its first token is
+sampled from the chunk's logits and emitted through the same token grid, and
+decoding starts the following step — exactly the contiguous engine's
+"prefill, sample first, then decode" order.  Because the two sub-steps share
+one batch, each pass restores the rows of slots in the *other* phase
+(per-slot lengths and SSM state), so a prefilling slot's accumulating state
+is never touched by the decode pass's masked garbage.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.engine.paged import BSTATE_KEYS, release_slots
 from repro.engine.sampler import SamplingParams, sample
 from repro.models.lm import Model
 
 
-def init_slot_state(n_slots: int) -> dict:
-    """Zeroed device-side slot state for a fresh pool of ``n_slots``."""
-    return {
+def init_slot_state(n_slots: int, prompt_cap: int = 0) -> dict:
+    """Zeroed device-side slot state for a fresh pool of ``n_slots``.
+
+    ``prompt_cap > 0`` adds the chunked-prefill fields: a per-slot prompt
+    buffer plus prefill cursor/length and the post-first-token decode
+    budget (armed by the engine's admission)."""
+    st = {
         "cur": jnp.zeros((n_slots, 1), jnp.int32),      # last sampled token
         "active": jnp.zeros((n_slots,), bool),          # slot serving a req?
         "remaining": jnp.zeros((n_slots,), jnp.int32),  # decode budget left
     }
+    if prompt_cap:
+        st["prompt"] = jnp.zeros((n_slots, prompt_cap), jnp.int32)
+        st["pf_pos"] = jnp.zeros((n_slots,), jnp.int32)   # next prompt row
+        st["pf_len"] = jnp.zeros((n_slots,), jnp.int32)   # prompt length
+        st["budget"] = jnp.zeros((n_slots,), jnp.int32)   # decode budget
+        st["pf_shared"] = jnp.zeros((n_slots,), jnp.int32)  # prefix-hit mark
+    return st
+
+
+def _keep_rows(new_cache: dict, old_cache: dict, keep) -> dict:
+    """Merge two paged caches per slot: rows of slots in ``keep`` come from
+    ``new_cache``, others are restored from ``old_cache``.  Pool leaves
+    (``pk``/``pv``) and the global allocator state stay from ``new_cache``
+    (writes of non-kept slots were trash-routed); per-slot leaves (SSM
+    state, batch axis 1 under the period axis) and ``lengths`` select."""
+    def sel(name, n, o):
+        if name in ("pk", "pv"):
+            return n
+        m = keep.reshape((1, keep.shape[0]) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, o)
+
+    merged = dict(new_cache)
+    for grp in ("stack", "prefix"):
+        if grp not in new_cache:
+            continue
+        merged[grp] = {
+            lk: {name: sel(name, lv[name], old_cache[grp][lk][name])
+                 for name in lv}
+            for lk, lv in new_cache[grp].items()}
+    merged["lengths"] = jnp.where(keep, new_cache["lengths"],
+                                  old_cache["lengths"])
+    return merged
 
 
 def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
-                         *, paged: bool = False):
+                         *, paged: bool = False, cow: bool = False,
+                         chunk: int = 0):
     """Build the jitted K-step decode dispatch.
 
     ``dispatch(params, state, cache, key)`` -> (state, cache, tokens [B, K],
@@ -46,29 +98,74 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
     pops blocks from the device free-list as slots cross block boundaries)
     and the moment a slot's budget drains its blocks are pushed back **inside
     the scan** — capacity recycles mid-dispatch without a host round-trip.
+    ``cow=True`` enables the copy-on-write write path (refcounted prefix
+    caching).  ``chunk > 0`` piggybacks chunked prefill on the scan (see
+    module docstring); extra state fields ride through untouched either way,
+    so the same state pytree serves both dispatch flavors.
     """
-    step_fn = model.decode_step_paged if paged else model.decode_step
-    if paged and step_fn is None:
-        raise NotImplementedError(
-            f"model family {model.cfg.family!r} has no paged decode path")
+    if not paged:
+        step_fn = model.decode_step
+    else:
+        if model.decode_step_paged is None:
+            raise NotImplementedError(
+                f"model family {model.cfg.family!r} has no paged decode path")
+        def step_fn(params, toks, cache):
+            return model.decode_step_paged(params, toks, cache, cow=cow)
+    if chunk:
+        if not paged or model.prefill_chunk_paged is None:
+            raise NotImplementedError(
+                "chunked prefill needs the paged cache path")
+        pf_fn = model.prefill_chunk_paged
 
     def dispatch(params, state: dict, cache: dict, key):
         def body(carry, step_key):
             st, cache = carry
-            logits, cache = step_fn(params, st["cur"], cache)
+            # ---- decode sub-step (slots in decode phase) ----------------
+            logits, new_cache = step_fn(params, st["cur"], cache)
+            if chunk:  # prefilling/idle slots' rows must stay untouched
+                new_cache = _keep_rows(new_cache, cache, st["active"])
+            cache = new_cache
             nxt = sample(logits, step_key, sp)
             emitted = st["active"]
             remaining = st["remaining"] - emitted.astype(jnp.int32)
             active = emitted & (remaining > 0)
             if paged:
-                from repro.engine.paged import BSTATE_KEYS, release_slots
                 bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
                                        emitted & ~active)
                 cache = {**cache, **bstate}
-            st = {"cur": nxt[:, None],
-                  "active": active,
+            tok_out, em_out = nxt, emitted
+            st = {**st, "cur": nxt[:, None], "active": active,
                   "remaining": remaining}
-            return (st, cache), (nxt, emitted)
+            # ---- chunked-prefill sub-step -------------------------------
+            if chunk:
+                pcap = st["prompt"].shape[1]
+                pf_left = st["pf_len"] - st["pf_pos"]
+                valid = jnp.clip(pf_left, 0, chunk)
+                prefilling = valid > 0
+                idx = jnp.clip(st["pf_pos"][:, None] + jnp.arange(chunk)[None],
+                               0, pcap - 1)
+                toks = jnp.take_along_axis(st["prompt"], idx, axis=1)
+                logits_pf, new_cache = pf_fn(params, toks, cache,
+                                             st["pf_pos"], valid,
+                                             st["pf_shared"])
+                cache = _keep_rows(new_cache, cache, prefilling)
+                completed = prefilling & (pf_left <= chunk)
+                first = sample(logits_pf, jax.random.fold_in(step_key, 1), sp)
+                go = completed & (st["budget"] > 0)
+                cache = {**cache,
+                         "slot_active": cache["slot_active"] | go}
+                bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
+                                       completed & ~go)
+                cache = {**cache, **bstate}
+                tok_out = jnp.where(completed, first, tok_out)
+                em_out = em_out | completed
+                st = {**st,
+                      "cur": tok_out[:, None],
+                      "active": st["active"] | go,
+                      "remaining": jnp.where(completed, st["budget"],
+                                             st["remaining"]),
+                      "pf_pos": st["pf_pos"] + valid}
+            return (st, cache), (tok_out, em_out)
 
         keys = jax.random.split(key, k_steps)
         (state, cache), (toks, emitted) = jax.lax.scan(

@@ -113,6 +113,15 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="KV pool size in blocks; 0 = capacity parity "
                          "with the contiguous cache (with --paged)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="chunked prefill: prompts stream through the "
+                         "decode dispatch in pieces of this many tokens "
+                         "instead of stalling decode (with --paged)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prompt-prefix block sharing: matched "
+                         "leading blocks are mapped instead of re-prefilled "
+                         "and stay cached (LRU) after requests finish "
+                         "(with --paged; implies chunked prefill)")
     ap.add_argument("--daq", action="store_true",
                     help="serve fp8-quantized weights (repro.quantize)")
     ap.add_argument("--metric", default="sign")
@@ -165,21 +174,31 @@ def main() -> None:
                             temperature=args.temperature
                             if args.temperature > 0 else 1.0,
                             top_k=args.top_k)
+    if (args.chunk_size or args.prefix_cache) and not args.paged:
+        raise SystemExit("--chunk-size/--prefix-cache require --paged")
     eng = Engine(model, params, slots=args.batch, cache_len=cache_len,
                  k_steps=args.k_steps, sampling=sp, mesh=mesh,
                  paged=args.paged, block_size=args.block_size,
-                 num_blocks=args.num_blocks)
+                 num_blocks=args.num_blocks, chunk_size=args.chunk_size,
+                 prefix_cache=args.prefix_cache)
 
     t0 = time.time()
     outs, stats = eng.serve(prompts, gen_tokens=args.gen, return_stats=True)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     kind = "paged" if args.paged else "contiguous"
+    if args.prefix_cache:
+        kind += "+prefix"
+    extra = ""
+    if args.paged and (args.chunk_size or args.prefix_cache):
+        extra = (f", {stats['prefill_tokens']} prompt tokens prefilled"
+                 + (f" ({stats.get('prefix_hits', 0)} prefix-hit)"
+                    if args.prefix_cache else ""))
     print(f"served {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s; {stats['host_syncs']} host syncs, "
           f"{stats['dispatches']} dispatches of {args.k_steps} steps, "
           f"{stats['prefill_calls']} prefill calls; {kind} cache, "
-          f"{stats['cache_bytes']} cache bytes)")
+          f"{stats['cache_bytes']} cache bytes{extra})")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o}")
 

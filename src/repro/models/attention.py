@@ -80,19 +80,20 @@ def _tile_scores(q, k, softcap: float):
 # ---------------------------------------------------------------------------
 
 def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
-                      softcap: float = 0.0, q_offset=0,
-                      kv_lengths=None, q_chunk: int = 0,
+                      softcap: float = 0.0, q_offsets=None,
+                      kv_offsets=None, kv_lengths=None, q_chunk: int = 0,
                       kv_chunk: int = 0) -> jnp.ndarray:
     """Flash attention (custom-VJP online softmax, models/flash.py).
 
     q [B,Sq,H,hd]; k,v [B,Skv,Kv,hd].  ``kv_lengths`` [B] masks kv padding.
-    Returns [B, Sq, H, hd] in q.dtype.  Padding to the tile grid and the
-    grouped-GQA reshape happen here; masking of padded kv rows rides the
-    same mask row as ``kv_lengths``.
+    ``q_offsets`` / ``kv_offsets`` [B] place the rows at global positions
+    ``off + i`` for the causal / sliding-window masks (paged prefill-chunk
+    path); None means position 0.  Returns [B, Sq, H, hd] in q.dtype.
+    Padding to the tile grid and the grouped-GQA reshape happen here;
+    masking of padded kv rows rides the same mask row as ``kv_lengths``.
     """
     from repro.runtime import flags
     from repro.models.flash import flash_attention
-    del q_offset  # prefill always starts at 0 in this framework
     B, Sq, H, hd = q.shape
     Skv, Kv = k.shape[1], k.shape[2]
     G = H // Kv
@@ -129,7 +130,12 @@ def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
     q_spec, kv_spec = attn_shard_specs(Kv, G)
     qg = constrain(qg, q_spec)
     k, v = constrain(k, kv_spec), constrain(v, kv_spec)
-    out = flash_attention(qg, k, v, mask, causal, window, softcap, cq, ck)
+    q_off = (jnp.zeros((B,), jnp.int32) if q_offsets is None
+             else q_offsets.astype(jnp.int32))
+    kv_off = (jnp.zeros((B,), jnp.int32) if kv_offsets is None
+              else kv_offsets.astype(jnp.int32))
+    out = flash_attention(qg, k, v, mask, q_off, kv_off, causal, window,
+                          softcap, cq, ck)
     out = constrain(out, q_spec)
     return out.reshape(B, nq * cq, H, hd)[:, :Sq]
 
@@ -169,6 +175,66 @@ def write_paged_kv(pk, pv, k_new, v_new, wblk, woff):
     pk = pk.at[wblk, woff].set(k_new[:, 0].astype(pk.dtype))
     pv = pv.at[wblk, woff].set(v_new[:, 0].astype(pv.dtype))
     return pk, pv
+
+
+def write_paged_kv_span(pk, pv, k_new, v_new, wblk, woff):
+    """Scatter a prefill chunk's kv rows [B,C,Kv,hd] into the block pools
+    at per-row targets (``wblk``/``woff`` [B,C] from
+    ``engine.paged.span_targets``; pad rows, capacity overflows and
+    shared-block rows point at the trash block)."""
+    pk = pk.at[wblk, woff].set(k_new.astype(pk.dtype))
+    pv = pv.at[wblk, woff].set(v_new.astype(pv.dtype))
+    return pk, pv
+
+
+def paged_prefill_attention(q, pk, pv, k_new, v_new, tbl, start, valid, *,
+                            sliding_window=0, softcap=0.0) -> jnp.ndarray:
+    """Prefill-chunk attention against the paged cache.
+
+    q/k_new/v_new [B,C,{H|Kv},hd] are this chunk's rows at global positions
+    ``start[b] + j`` (rows ``j >= valid[b]`` are pads); pools/tbl are the
+    paged cache *before* the chunk's rows are written.  The kv buffer is
+    assembled as gather(cache) overlaid with the fresh rows, so each query
+    row attends exactly the prefix ``[0, pos]`` (window-banded for SWA) —
+    and because flash's per-row online softmax treats trailing masked rows
+    and omitted fully-masked leading tiles as exact identities, the result
+    is **bitwise equal** to the corresponding rows of a one-shot prefill
+    (given a same-dtype cache; fp8 caches trade that for memory).
+
+    Rings gather **before** the write on purpose: a chunk's writes wrap the
+    ring and would evict rows its own early queries still need.
+    """
+    from repro.engine.paged import gather_blocks
+    B, C = k_new.shape[:2]
+    bs = pk.shape[1]
+    MB = tbl.shape[1]
+    cap = MB * bs
+    ring = bool(sliding_window) and cap == sliding_window
+    if ring:
+        W = sliding_window
+        Wb = W + C
+        base = jnp.maximum(start - (W - 1), 0)              # [B]
+        pos = base[:, None] + jnp.arange(Wb)[None]          # [B, Wb]
+        blk = jnp.take_along_axis(tbl, (pos % W) // bs, axis=1)
+        off = (pos % W) % bs
+        gk, gv = pk[blk, off], pv[blk, off]                 # [B,Wb,Kv,hd]
+        kv_off = base
+    else:
+        pos = jnp.broadcast_to(jnp.arange(cap)[None], (B, cap))
+        gk, gv = gather_blocks(pk, tbl), gather_blocks(pv, tbl)
+        kv_off = jnp.zeros((B,), jnp.int32)
+    rel = pos - start[:, None]                              # [B, Wb|cap]
+    fresh = (rel >= 0) & (rel < C)
+    idx = jnp.clip(rel, 0, C - 1)[..., None, None]
+    fm = fresh[..., None, None]
+    gk = jnp.where(fm, jnp.take_along_axis(k_new, idx, axis=1),
+                   gk.astype(k_new.dtype))
+    gv = jnp.where(fm, jnp.take_along_axis(v_new, idx, axis=1),
+                   gv.astype(v_new.dtype))
+    n_valid = start + valid - kv_off                        # local kv count
+    return chunked_attention(q, gk, gv, causal=True, window=sliding_window,
+                             softcap=softcap, q_offsets=start,
+                             kv_offsets=kv_off, kv_lengths=n_valid)
 
 
 def paged_decode_attention(q, pk, pv, tbl, lengths, *, sliding_window=0,

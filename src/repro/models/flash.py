@@ -47,15 +47,18 @@ def _tile_scores(qc, kc, softcap: float):
 
 
 def _tile_mask(q_pos, kv_pos, mask_row, causal: bool, window: int):
-    """[B,1,1,cq,ck] boolean tile mask."""
+    """[B,1,1,cq,ck] boolean tile mask.  ``q_pos`` [B,cq] / ``kv_pos``
+    [B,ck] carry per-batch global positions (the paged prefill-chunk path
+    offsets both; the classic path passes broadcast rows)."""
+    cq = q_pos.shape[1]
     m = (mask_row > 0)[:, None, None, None, :] \
-        & jnp.ones((1, 1, 1, q_pos.shape[0], 1), bool)
+        & jnp.ones((1, 1, 1, cq, 1), bool)
     if causal:
-        cm = kv_pos[None, :] <= q_pos[:, None]
-        m = m & cm[None, None, None]
+        cm = kv_pos[:, None, :] <= q_pos[:, :, None]        # [B,cq,ck]
+        m = m & cm[:, None, None]
     if window > 0:
-        wm = kv_pos[None, :] > (q_pos[:, None] - window)
-        m = m & wm[None, None, None]
+        wm = kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+        m = m & wm[:, None, None]
     return m
 
 
@@ -68,12 +71,21 @@ def _dyn_chunk(x, i, c, axis=1):
     return jax.lax.dynamic_slice(x, starts, sizes)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
-def flash_attention(q, k, v, mask, causal: bool, window: int, softcap: float,
-                    cq: int, ck: int):
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9, 10))
+def flash_attention(q, k, v, mask, q_off, kv_off, causal: bool, window: int,
+                    softcap: float, cq: int, ck: int):
     """q [B,Sq,Kv,G,hd]; k,v [B,Skv,Kv,hd]; mask f32 [B,Skv].
+
+    ``q_off`` / ``kv_off`` [B] int32 shift the *global positions* the
+    causal / sliding-window masks see: row ``i`` of q sits at position
+    ``q_off[b] + i`` and kv row ``j`` at ``kv_off[b] + j``.  Zeros recover
+    the classic from-position-0 layout; the paged prefill-chunk path uses
+    them to attend mid-sequence rows against a cache whose leading
+    fully-masked tiles are omitted (an exact identity in the online-softmax
+    update, so results stay bitwise equal to the full-length call).
     Returns [B,Sq,Kv,G,hd] in q.dtype."""
-    out, _ = _fwd(q, k, v, mask, causal, window, softcap, cq, ck)
+    out, _ = _fwd(q, k, v, mask, q_off, kv_off, causal, window, softcap,
+                  cq, ck)
     return out
 
 
@@ -89,7 +101,7 @@ def _data_zero(ref) -> jnp.ndarray:
     return (ref.reshape(-1)[0] * 0).astype(jnp.float32)
 
 
-def _fwd(q, k, v, mask, causal, window, softcap, cq, ck):
+def _fwd(q, k, v, mask, q_off, kv_off, causal, window, softcap, cq, ck):
     B, Sq, Kv, G, hd = q.shape
     Skv = k.shape[1]
     mask = mask + _data_zero(k)
@@ -101,7 +113,7 @@ def _fwd(q, k, v, mask, causal, window, softcap, cq, ck):
     def q_body(qi, bufs):
         out_buf, lse_buf = bufs
         qc = _dyn_chunk(q, qi, cq)
-        q_pos = qi * cq + jnp.arange(cq)
+        q_pos = q_off[:, None] + qi * cq + jnp.arange(cq)[None]
 
         def kv_body(ki, carry):
             # NOTE: no lax.cond tile-skipping here.  cond's partial-eval
@@ -110,7 +122,7 @@ def _fwd(q, k, v, mask, causal, window, softcap, cq, ck):
             # observed).  Fully-masked tiles are computed and discarded;
             # the causal 2x FLOP saving is recovered by the triangle
             # iteration in EXPERIMENTS.md §Perf.
-            kv_pos = ki * ck + jnp.arange(ck)
+            kv_pos = kv_off[:, None] + ki * ck + jnp.arange(ck)[None]
             m, l, acc = carry
             kc = _dyn_chunk(k, ki, ck)
             vc = _dyn_chunk(v, ki, ck)
@@ -146,13 +158,14 @@ def _fwd(q, k, v, mask, causal, window, softcap, cq, ck):
     return out_buf.astype(q.dtype), lse_buf
 
 
-def _fwd_vjp(q, k, v, mask, causal, window, softcap, cq, ck):
-    out, lse = _fwd(q, k, v, mask, causal, window, softcap, cq, ck)
-    return out, (q, k, v, mask, out, lse)
+def _fwd_vjp(q, k, v, mask, q_off, kv_off, causal, window, softcap, cq, ck):
+    out, lse = _fwd(q, k, v, mask, q_off, kv_off, causal, window, softcap,
+                    cq, ck)
+    return out, (q, k, v, mask, q_off, kv_off, out, lse)
 
 
 def _bwd_vjp(causal, window, softcap, cq, ck, res, dout):
-    q, k, v, mask, out, lse = res
+    q, k, v, mask, q_off, kv_off, out, lse = res
     mask = mask + _data_zero(dout)
     B, Sq, Kv, G, hd = q.shape
     Skv = k.shape[1]
@@ -171,13 +184,13 @@ def _bwd_vjp(causal, window, softcap, cq, ck, res, dout):
         dq_buf, dk_buf, dv_buf = bufs
         qc = _dyn_chunk(q, qi, cq)
         doc = _dyn_chunk(dout32, qi, cq)
-        q_pos = qi * cq + jnp.arange(cq)
+        q_pos = q_off[:, None] + qi * cq + jnp.arange(cq)[None]
         lct = _dyn_chunk(lse, qi, cq).transpose(0, 2, 3, 1)   # [B,Kv,G,cq]
         Dct = _dyn_chunk(Drow, qi, cq).transpose(0, 2, 3, 1)
 
         def kv_body(ki, inner):
             dq_c, dk_buf, dv_buf = inner
-            kv_pos = ki * ck + jnp.arange(ck)
+            kv_pos = kv_off[:, None] + ki * ck + jnp.arange(ck)[None]
             kc = _dyn_chunk(k, ki, ck)
             vc = _dyn_chunk(v, ki, ck)
             mc = jax.lax.dynamic_slice(mask, (0, ki * ck), (B, ck))
@@ -223,7 +236,8 @@ def _bwd_vjp(causal, window, softcap, cq, ck, res, dout):
     dq_buf, dk_buf, dv_buf = jax.lax.fori_loop(
         0, nq, q_body, (dq_buf, dk_buf, dv_buf))
     return (dq_buf.astype(q.dtype), dk_buf.astype(k.dtype),
-            dv_buf.astype(v.dtype), jnp.zeros_like(mask))
+            dv_buf.astype(v.dtype), jnp.zeros_like(mask),
+            jnp.zeros_like(q_off), jnp.zeros_like(kv_off))
 
 
 flash_attention.defvjp(_fwd_vjp, _bwd_vjp)

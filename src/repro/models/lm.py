@@ -245,7 +245,12 @@ def _attn_decode_paged(p, x, cache, pctx, cfg: ModelConfig):
     at the slot's write target (``pctx["wblk"]/["woff"]``, precomputed once
     per step — trash block for inactive slots), and attention runs over the
     block-table gather, which reproduces the dense cache layout (linear
-    positions, or ring positions for SWA) value-for-value."""
+    positions, or ring positions for SWA) value-for-value.
+
+    When ``pctx["cow_src"]`` is present (refcounted prefix caching), the
+    write block is first overwritten with the rows of its copy-on-write
+    source — the identity when ``cow_src == wblk`` (no sharing), a real
+    block copy when ``alloc_step`` rewired the slot off a shared block."""
     B = x.shape[0]
     lengths = pctx["lengths"]
     q, k, v = A.qkv_proj(p, x, cfg)
@@ -258,14 +263,81 @@ def _attn_decode_paged(p, x, cache, pctx, cfg: ModelConfig):
     if r > 1:  # repeat-sharded cache (see _kv_eff)
         k = jnp.repeat(k, r, axis=2)
         v = jnp.repeat(v, r, axis=2)
-    pk, pv = A.write_paged_kv(cache["pk"], cache["pv"], k, v,
-                              pctx["wblk"], pctx["woff"])
+    pk, pv = cache["pk"], cache["pv"]
+    if "cow_src" in pctx:
+        # at most one slot CoWs per step and most steps none at all, so
+        # the block copy (a whole-block gather+scatter per layer) is
+        # gated on the step-wide predicate; skipping the identity copy
+        # (cow_src == wblk) is a bitwise no-op
+        def _copy(pools):
+            a, b = pools
+            return (a.at[pctx["wblk"]].set(a[pctx["cow_src"]]),
+                    b.at[pctx["wblk"]].set(b[pctx["cow_src"]]))
+        pk, pv = jax.lax.cond(pctx["cow_any"], _copy, lambda p: p, (pk, pv))
+    pk, pv = A.write_paged_kv(pk, pv, k, v, pctx["wblk"], pctx["woff"])
     out = A.paged_decode_attention(q, pk, pv, pctx["tbl"], lengths,
                                    sliding_window=cfg.sliding_window,
                                    softcap=cfg.attn_logit_softcap)
     from repro.quant_runtime import qlinear
     y = qlinear.matmul(out.reshape(B, 1, -1), p["wo"])
     return y, {**cache, "pk": pk, "pv": pv}
+
+
+def _attn_prefill_paged(p, x, cache, pctx, cfg: ModelConfig):
+    """Self-attn over one prefill chunk against the paged pool: the chunk's
+    rows (global positions ``start[b] + j``) attend the slot's cached
+    prefix plus themselves, then land in the pool at the precomputed span
+    targets (pads / overflows / shared blocks route to trash)."""
+    B, C, _ = x.shape
+    q, k, v = A.qkv_proj(p, x, cfg)
+    if cfg.rope_theta > 0:
+        pos = pctx["start"][:, None] + jnp.arange(C)[None]
+        cos, sin = A.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        q = A.apply_rope(q, cos, sin)
+        k = A.apply_rope(k, cos, sin)
+    r = _kv_eff(cfg) // cfg.n_kv_heads
+    if r > 1:  # repeat-sharded cache (see _kv_eff)
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    out = A.paged_prefill_attention(q, cache["pk"], cache["pv"], k, v,
+                                    pctx["tbl"], pctx["start"],
+                                    pctx["valid"],
+                                    sliding_window=cfg.sliding_window,
+                                    softcap=cfg.attn_logit_softcap)
+    pk, pv = A.write_paged_kv_span(cache["pk"], cache["pv"], k, v,
+                                   pctx["wblk"], pctx["woff"])
+    from repro.quant_runtime import qlinear
+    y = qlinear.matmul(out.reshape(B, C, -1), p["wo"])
+    return y, {**cache, "pk": pk, "pv": pv}
+
+
+def apply_layer_prefill_paged(p: dict, x, cache: dict, pctx: dict,
+                              cfg: ModelConfig, spec: LayerSpec):
+    """Prefill-chunk variant of :func:`apply_layer_decode_paged`: attention
+    writes the chunk's rows into the pool, Mamba/SSM layers thread their
+    per-slot recurrent state chunk-to-chunk."""
+    mixer, ffn = spec
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    if mixer in ("attn", "enc_attn"):
+        y, cache = _attn_prefill_paged(p["attn"], h, cache, pctx, cfg)
+        x = x + y
+    elif mixer == "mamba":
+        y, cache = SSM.mamba_prefill_chunk(p["mamba"], x, h, cfg, cache,
+                                           pctx["valid"])
+        x = x + y
+    else:
+        raise ValueError(f"paged prefill not supported for mixer {mixer!r}")
+    if ffn != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            # full capacity: the chunk batch mixes unrelated slots' rows
+            # (and pad garbage), so capacity competition would couple
+            # tokens across slots and break chunked == one-shot exactness
+            y, _ = MOE.apply_moe(p["moe"], h2, cfg, full_capacity=True)
+            x = x + y
+        else:
+            x = x + apply_mlp(p["mlp"], h2)
+    return x, cache
 
 
 def apply_layer_decode_paged(p: dict, x, cache: dict, pctx: dict,
@@ -464,6 +536,21 @@ def run_stack_decode_paged(stack, cache, x, pctx, cfg, specs):
     return x, new_cache
 
 
+def run_stack_prefill_paged(stack, cache, x, pctx, cfg, specs):
+    """Prefill-chunk scan over the period stack (chunked prefill rides the
+    decode dispatch, so this mirrors :func:`run_stack_decode_paged`)."""
+    def body(h, xs):
+        lp, lc = xs
+        nc = {}
+        for i, spec in enumerate(specs):
+            h, nci = apply_layer_prefill_paged(lp[f"L{i}"], h, lc[f"L{i}"],
+                                               pctx, cfg, spec)
+            nc[f"L{i}"] = nci
+        return h, nc
+    x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    return x, new_cache
+
+
 def run_stack_prefill(stack, x, cfg, specs, *, memory=None, cache_len=0):
     def body(h, lp):
         caches = {}
@@ -508,8 +595,12 @@ class Model:
                                  # (batch, cache_len, block_size=,
                                  #  num_blocks=) -> paged cache
     decode_step_paged: Callable | None = None
-                                 # (params, tokens, paged cache) ->
+                                 # (params, tokens, paged cache, cow=) ->
                                  #   (logits, paged cache)
+    prefill_chunk_paged: Callable | None = None
+                                 # (params, tokens [B,C], paged cache,
+                                 #  start [B], valid [B]) ->
+                                 #   (last-valid-row logits [B,V], cache)
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -637,10 +728,12 @@ def build_model(cfg: ModelConfig) -> Model:
                                              batch, num_blocks, block_size)
         return c
 
-    def decode_step_paged(params, tokens, pcache):
+    def decode_step_paged(params, tokens, pcache, cow: bool = False):
         """tokens [B, 1] -> (logits [B, V], new paged cache).  Block
         allocation and write targets are computed once per step and shared
-        by every attention layer (the stack advances in lockstep)."""
+        by every attention layer (the stack advances in lockstep).  With
+        ``cow=True`` (refcounted prefix caching) a write landing in a
+        shared block pops a private copy first — see engine/paged.py."""
         from repro.engine.paged import BSTATE_KEYS, alloc_step
         x = embed_tokens(params["embed"], tokens)
         lengths = pcache["lengths"]
@@ -651,9 +744,13 @@ def build_model(cfg: ModelConfig) -> Model:
             cap = pcache["tbl"].shape[1] * bs
             ring = bool(cfg.sliding_window) and cap == cfg.sliding_window
             bstate = {k: pcache[k] for k in BSTATE_KEYS}
-            bstate, wblk, woff = alloc_step(bstate, lengths, bs, cap, ring)
+            bstate, wblk, woff, cow_src = alloc_step(bstate, lengths, bs,
+                                                     cap, ring, cow=cow)
             pctx = {"lengths": lengths, "tbl": bstate["tbl"],
                     "wblk": wblk, "woff": woff}
+            if cow:
+                pctx["cow_src"] = cow_src
+                pctx["cow_any"] = jnp.any(cow_src != wblk)
             new_cache.update(bstate)
         else:  # pure-SSM stack: contiguous state, no pools to manage
             pctx = {"lengths": lengths}
@@ -668,9 +765,51 @@ def build_model(cfg: ModelConfig) -> Model:
         new_cache["lengths"] = lengths + 1
         return logits, new_cache
 
+    def prefill_chunk_paged(params, tokens, pcache, start, valid,
+                            shared_until=None):
+        """One prefill chunk through the paged cache (chunked prefill /
+        prefix-hit tail recompute).  ``tokens`` [B, C] are rows
+        ``start[b]..start[b]+valid[b]-1`` of each slot's prompt (``valid[b]
+        == 0`` passes the slot through untouched); ``shared_until`` [B]
+        marks each slot's prefix-hit watermark (rows below it write into
+        shared blocks and are dropped — the cached rows are identical).
+        Returns the logits of each slot's last valid row (garbage where
+        ``valid == 0``) and the cache with the chunk's KV written and
+        per-slot lengths advanced to ``start + valid``."""
+        from repro.engine.paged import BSTATE_KEYS, span_targets
+        B, C = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        start = start.astype(jnp.int32)
+        valid = valid.astype(jnp.int32)
+        pctx = {"start": start, "valid": valid}
+        new_cache = dict(pcache)
+        if _attn_idx is not None:
+            leaf = pcache["stack"][f"L{_attn_idx}"]["pk"]
+            bs = leaf.shape[2]
+            cap = pcache["tbl"].shape[1] * bs
+            ring = bool(cfg.sliding_window) and cap == cfg.sliding_window
+            bstate = {k: pcache[k] for k in BSTATE_KEYS}
+            wblk, woff = span_targets(bstate, start, valid, C, bs, cap,
+                                      ring, shared_until)
+            pctx.update(tbl=bstate["tbl"], wblk=wblk, woff=woff)
+        if n_prefix:
+            x, new_cache["prefix"] = run_stack_prefill_paged(
+                params["prefix"], pcache["prefix"], x, pctx, cfg,
+                prefix_specs)
+        x, new_cache["stack"] = run_stack_prefill_paged(
+            params["stack"], pcache["stack"], x, pctx, cfg, specs)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        idx = jnp.clip(valid - 1, 0, C - 1)
+        xg = x[jnp.arange(B), idx][:, None]
+        logits = lm_logits(params["embed"], xg)[:, 0]
+        new_cache["lengths"] = jnp.where(valid > 0, start + valid,
+                                         pcache["lengths"])
+        return logits, new_cache
+
     return Model(cfg, init, loss_fn, init_cache, prefill, decode_step,
                  init_paged_cache=init_paged_cache,
-                 decode_step_paged=decode_step_paged)
+                 decode_step_paged=decode_step_paged,
+                 prefill_chunk_paged=prefill_chunk_paged)
 
 
 # ---------------------------------------------------------------------------

@@ -92,15 +92,23 @@ def top_k_routing(logits: jnp.ndarray, top_k: int, capacity: int):
 
 
 def apply_moe(p: dict, x: jnp.ndarray, cfg: ModelConfig,
-              group_target: int = 0):
-    """x [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+              group_target: int = 0, full_capacity: bool = False):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    ``full_capacity`` sizes every expert queue for the worst case
+    (``g * K`` — no token can ever be dropped).  Routing then decouples
+    across tokens: each token's output is a pure function of its own
+    hidden state, which the paged prefill-chunk path needs — its batch
+    mixes unrelated slots' rows and pad garbage, and capacity competition
+    against those would break prefill-order invariance."""
     from repro.runtime import flags
     B, S, D = x.shape
     E, K = cfg.n_experts, cfg.top_k
     T = B * S
     g = _group_tokens(T, group_target or flags["moe_group"])
     G = T // g
-    cap = max(int(g * K * cfg.capacity_factor / E), 1)
+    cap = g * K if full_capacity \
+        else max(int(g * K * cfg.capacity_factor / E), 1)
     # round capacity to a multiple of 8 for lane alignment
     cap = -(-cap // 8) * 8
 

@@ -54,10 +54,13 @@ def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
 
 
 def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-                 state: jnp.ndarray | None = None):
+                 state: jnp.ndarray | None = None, valid=None):
     """Depthwise causal conv over S.  x [B,S,C]; w [K,C].
 
     ``state`` [B,K-1,C] prepends history (decode/prefill continuation).
+    ``valid`` [B] marks per-row true lengths of a right-padded chunk: the
+    returned state is then the history as of row ``valid[b]`` (pad rows
+    must not enter the recurrence — chunked prefill).
     Returns (silu(out) [B,S,C] fp32, new_state [B,K-1,C]).
     """
     K = w.shape[0]
@@ -69,7 +72,11 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     for k in range(K):  # K is 4: unrolled taps, XLA fuses into one pass
         out = out + ext[:, k: k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
     out = out + b.astype(jnp.float32)
-    new_state = ext[:, S:]
+    if valid is None:
+        new_state = ext[:, S:]
+    else:  # ext row (K-1) + t holds input position t
+        idx = valid[:, None] + jnp.arange(K - 1)[None]
+        new_state = jnp.take_along_axis(ext, idx[..., None], axis=1)
     return jax.nn.silu(out), new_state
 
 
@@ -82,7 +89,7 @@ def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
 
 
 def _project(p: dict, h: jnp.ndarray, cfg: ModelConfig,
-             conv_state: dict | None = None):
+             conv_state: dict | None = None, valid=None):
     """Shared front half: projections + conv + dt.  Returns
     (z, xh [B,S,nh,P] fp32, Bc, Cc, dt, new_conv_state)."""
     Bsz, S, _ = h.shape
@@ -94,8 +101,8 @@ def _project(p: dict, h: jnp.ndarray, cfg: ModelConfig,
     dt_raw = qlinear.matmul(h, p["in_dt"])
     cs_x = conv_state["conv_x"] if conv_state else None
     cs_bc = conv_state["conv_bc"] if conv_state else None
-    xc, ns_x = _causal_conv(xc, p["conv_x_w"], p["conv_x_b"], cs_x)
-    bc, ns_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], cs_bc)
+    xc, ns_x = _causal_conv(xc, p["conv_x_w"], p["conv_x_b"], cs_x, valid)
+    bc, ns_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], cs_bc, valid)
     xh = xc.reshape(Bsz, S, nh, P)
     Bc, Cc = bc[..., :N], bc[..., N:]
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
@@ -183,6 +190,37 @@ def mamba_forward(p: dict, x_in: jnp.ndarray, h: jnp.ndarray,
 def mamba_train(p: dict, h: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     out, _ = mamba_forward(p, h, h, cfg, cache=None)
     return out
+
+
+def mamba_prefill_chunk(p: dict, x_in: jnp.ndarray, h: jnp.ndarray,
+                        cfg: ModelConfig, cache: dict, valid: jnp.ndarray):
+    """One prefill *chunk* through the Mamba-2 sublayer with state threading.
+
+    ``h`` [B, C, D] holds rows at positions ``start..start+C-1`` of each
+    slot's prompt; rows ``>= valid[b]`` are pads and are masked to **exact
+    no-ops** of the SSD recurrence (``x = 0``, ``dt = 0`` post-softplus —
+    the same zeros ``ssd_scan`` pads with internally), so the carried state
+    and the real rows' outputs are bit-identical to the corresponding
+    chunk of a one-shot :func:`mamba_forward` whenever chunk boundaries
+    fall on multiples of ``cfg.ssm_chunk`` (the engine enforces
+    ``chunk_size % ssm_chunk == 0`` for stacks with SSM layers).
+    Slots with ``valid == 0`` pass their state through untouched.
+    """
+    Bsz, C, _ = h.shape
+    di = cfg.resolved_d_inner
+    z, xh, Bc, Cc, dt, conv_state = _project(p, h, cfg, cache, valid=valid)
+    vm = jnp.arange(C)[None, :] < valid[:, None]            # [B, C]
+    xh = jnp.where(vm[:, :, None, None], xh, 0.0)
+    dt = jnp.where(vm[:, :, None], dt, 0.0)
+    Bc = jnp.where(vm[:, :, None], Bc, 0.0)
+    Cc = jnp.where(vm[:, :, None], Cc, 0.0)
+    y, h_fin = ssd_scan(xh, Bc, Cc, dt, p["a_log"], cfg.ssm_chunk,
+                        cache["h"])
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = _gated_norm(y.reshape(Bsz, C, di), z, p["norm_scale"])
+    out = qlinear.matmul(y.astype(x_in.dtype), p["out_proj"])
+    return out, {"h": h_fin, **conv_state}
 
 
 def init_mamba_cache(cfg: ModelConfig, batch: int) -> dict:

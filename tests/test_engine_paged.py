@@ -134,6 +134,92 @@ def test_paged_gen_tokens_one_releases_blocks_at_admission():
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill: bit-identical to one-shot prefill across the families
+# ---------------------------------------------------------------------------
+
+def _setup_dropless(arch):
+    """MoE configs at dropless capacity (capacity_factor = n_experts, so no
+    token can overflow an expert queue).  Chunked prefill routes each chunk
+    at full capacity by construction — GShard *round-major* capacity
+    positions are non-causal (a token's 2nd-choice queue position depends
+    on LATER tokens' 1st choices), so one-shot drop decisions are
+    fundamentally unreproducible from a chunk's worth of tokens.  Exactness
+    is therefore defined (and asserted) on dropless routing, which is what
+    a serving engine wants regardless; weights are unaffected."""
+    import dataclasses
+    key = ("dropless", arch)
+    if key not in _BUILT:
+        cfg = reduced(get_arch(arch))
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+        model = build_model(cfg)
+        params = model.init(KEY)
+        _BUILT[key] = (cfg, model, params,
+                       LanguageSpec(vocab=cfg.vocab_size))
+    return _BUILT[key]
+
+
+def test_chunked_prefill_token_exact_matrix():
+    """Chunked prefill (prompts streaming through the decode dispatch in
+    chunk_size pieces) must be token-exact vs the one-shot-prefill
+    contiguous engine on every family: dense, SWA-ring (chunks wrap the
+    paged ring), capacity-routed MoE (dropless — see _setup_dropless),
+    pure SSM and hybrid (state threaded chunk-to-chunk on the SSD grid).
+    Prompts cross chunk AND block boundaries and mix with in-flight
+    decode (slot churn: more requests than slots).
+
+    Each case runs the paged+prefix engine TWICE: the cold pass pins
+    chunked-vs-one-shot (and in-run sharing where content-sound), the warm
+    pass pins prefix-hit-vs-cold-cache — bit-identical outputs in every
+    direction.  SWA/SSM/hybrid run with matching disabled (position-keyed
+    rings / recurrent state can't be shared), so their warm pass pins that
+    the persistent cache stays exact with sharing inert."""
+    cases = [
+        ("glm4-9b", False, 8, [10, 25, 6, 17], 40),      # dense
+        ("mixtral-8x22b", True, 8, [9, 21, 9, 14], 34),  # SWA ring + MoE
+        ("deepseek-v3", True, 8, [9, 21, 14], 34),       # MoE (no window)
+        ("mamba2-780m", False, 32, [9, 40, 12], 48),     # pure SSM
+        ("jamba-v0.1-52b", True, 32, [9, 40, 12], 48),   # hybrid
+    ]
+    for arch, moe, chunk, lens, cache_len in cases:
+        cfg, model, params, spec = (_setup_dropless(arch) if moe
+                                    else _setup(arch))
+        prompts = _prompts(spec, lens)
+        contig = Engine(model, params, slots=2, cache_len=cache_len,
+                        k_steps=2).serve(prompts, gen_tokens=4)
+        peng = Engine(model, params, slots=2, cache_len=cache_len,
+                      k_steps=2, paged=True, block_size=8, chunk_size=chunk,
+                      prefix_cache=True, check_invariants=True)
+        assert peng.serve(prompts, gen_tokens=4) == contig, arch   # cold
+        assert peng.serve(prompts, gen_tokens=4) == contig, arch   # warm
+
+
+def test_chunked_prefill_without_prefix_cache_exact():
+    """Plain chunked prefill (no sharing, cow=False dispatch) on dense."""
+    cfg, model, params, spec = _setup()
+    prompts = _prompts(spec, [10, 25, 6, 17])
+    contig = Engine(model, params, slots=2, cache_len=40,
+                    k_steps=2).serve(prompts, gen_tokens=4)
+    cout = Engine(model, params, slots=2, cache_len=40, k_steps=2,
+                  paged=True, block_size=8, chunk_size=8,
+                  check_invariants=True).serve(prompts, gen_tokens=4)
+    assert cout == contig
+
+
+def test_chunked_validation_errors():
+    cfg, model, params, spec = _setup()
+    with pytest.raises(ValueError, match="need paged"):
+        Engine(model, params, slots=2, cache_len=32, chunk_size=8)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        Engine(model, params, slots=2, cache_len=16, paged=True,
+               block_size=8, chunk_size=8).serve(
+                   _prompts(spec, [24]), gen_tokens=2)
+    cfg, model, params, spec = _setup("jamba-v0.1-52b")
+    with pytest.raises(ValueError, match="multiple of ssm_chunk"):
+        Engine(model, params, slots=2, cache_len=64, paged=True,
+               block_size=8, chunk_size=8)
+
+
+# ---------------------------------------------------------------------------
 # Randomized stress: hypothesis-seeded mixed lengths / arrivals / churn
 # ---------------------------------------------------------------------------
 
@@ -191,17 +277,19 @@ def test_block_allocator_invariants():
         return set(f[: int(bs["n_free"])].tolist())
 
     # decode-time allocation: slot 0 -> block j=0, slot 1 -> j=1, slot 2 -> j=4>=MB? no: 16//8=2
-    bstate, wblk, woff = alloc_step(bstate, lengths, 8, MB * 8, False)
+    bstate, wblk, woff, _ = alloc_step(bstate, lengths, 8, MB * 8, False)
     assert int(bstate["n_free"]) == NB - 3
     assert held(bstate) & free_set(bstate) == set()
     assert held(bstate) | free_set(bstate) == set(range(NB))
+    # every allocated block carries exactly one reference
+    assert all(int(bstate["ref"][b]) == 1 for b in held(bstate))
     # write targets point at the allocated blocks, offsets are in-block
     assert np.all(np.asarray(wblk) < NB)
     np.testing.assert_array_equal(np.asarray(woff), [0, 5, 0])
 
     # inactive slots route to the trash block and never allocate
     bstate["slot_active"] = jnp.asarray([True, False, True])
-    b2, wblk2, _ = alloc_step(bstate, lengths + 1, 8, MB * 8, False)
+    b2, wblk2, _, _ = alloc_step(bstate, lengths + 1, 8, MB * 8, False)
     assert int(b2["n_free"]) == int(bstate["n_free"])
     assert int(wblk2[1]) == NB                    # trash index
 
