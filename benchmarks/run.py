@@ -83,6 +83,13 @@ def serve_bench():
     bench_serve.main([])
 
 
+def spec_bench():
+    """Speculative decoding: acceptance rate + tok/s per draft
+    quantization method (BENCH_spec.json)."""
+    from benchmarks import bench_spec
+    bench_spec.main([])
+
+
 def roofline():
     from benchmarks import roofline_report
     t = roofline_report.table("pod16x16")
@@ -99,6 +106,7 @@ BENCHES = {
     "train": train_throughput,
     "decode": decode_throughput,
     "serve": serve_bench,
+    "spec": spec_bench,
     "roofline": roofline,
 }
 

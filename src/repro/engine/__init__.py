@@ -12,25 +12,32 @@ See engine.py (host/device split), scheduler.py (slot state + K-step
 dispatch, in-scan chunked prefill), paged.py (paged KV cache: block pool,
 block tables, device free-list, refcounted sharing + copy-on-write —
 ``Engine(..., paged=True)``), prefix.py (host chained-hash prompt-block
-index — ``Engine(..., paged=True, prefix_cache=True)``), sampler.py
-(greedy / temperature / top-k), legacy.py (the old host-driven loop, kept
-as benchmark baseline).
+index — ``Engine(..., paged=True, prefix_cache=True)``), spec.py (self-speculative
+decoding: quantized-draft rounds verified by the full-precision model —
+``Engine(..., paged=True, n_spec=4, draft_params=qtree)``), sampler.py
+(greedy / temperature / top-k / top-p), legacy.py (the old host-driven
+loop, kept as benchmark baseline).
 """
 from repro.engine.engine import Engine, EngineConfig
 from repro.engine.legacy import serve_host_loop, single_slot_prefill
-from repro.engine.paged import (admit_slot, alloc_admit, alloc_step,
-                                blocks_for, gather_blocks, init_block_state,
-                                release_refs, release_slots, span_targets)
+from repro.engine.paged import (admit_slot, alloc_admit, alloc_span,
+                                alloc_step, blocks_for, gather_blocks,
+                                init_block_state, release_refs,
+                                release_slots, span_targets)
 from repro.engine.prefix import PrefixIndex, chain_hashes
-from repro.engine.sampler import SamplingParams, sample
+from repro.engine.sampler import SamplingParams, probs, sample, warp_logits
 from repro.engine.scheduler import (init_slot_state, make_decode_dispatch,
                                     make_decode_step)
+from repro.engine.spec import (greedy_accept, make_spec_dispatch,
+                               rejection_accept)
 
 __all__ = [
-    "Engine", "EngineConfig", "SamplingParams", "sample",
+    "Engine", "EngineConfig", "SamplingParams", "sample", "probs",
+    "warp_logits",
     "init_slot_state", "make_decode_dispatch", "make_decode_step",
+    "make_spec_dispatch", "greedy_accept", "rejection_accept",
     "serve_host_loop", "single_slot_prefill",
-    "admit_slot", "alloc_admit", "alloc_step", "blocks_for",
+    "admit_slot", "alloc_admit", "alloc_span", "alloc_step", "blocks_for",
     "gather_blocks", "init_block_state", "release_refs", "release_slots",
     "span_targets", "PrefixIndex", "chain_hashes",
 ]

@@ -55,6 +55,16 @@ no extra syncs); everything per-token lives on device:
   (the chunked machinery still applies, outputs stay exact, nothing is
   shared).
 
+* **self-speculative decoding** — ``n_spec > 0`` (paged only; pass a
+  quantized ``draft_params`` tree) swaps each dispatch step for a
+  speculative round: the quantized tree drafts ``n_spec`` tokens, one
+  full-precision multi-token verify forward accepts a prefix (greedy
+  match, or lossless rejection sampling for temperature/top-k/top-p), and
+  rejected positions roll back per slot (engine/spec.py).  Greedy outputs
+  stay token-exact vs the non-speculative engine; the draft acceptance
+  rate (stats ``draft_accepted / draft_tokens``) doubles as a data-free
+  behavioral-fidelity metric for the quantization method.
+
 Right-padded prefill is only exact when a row's hidden states cannot depend
 on positions after it or on other tokens' presence: pure causal attention
 qualifies; SWA ring caches (slot = position % window would index pad
@@ -95,6 +105,11 @@ class EngineConfig:
                             # (paged only; tokens per in-scan prefill piece)
     prefix_cache: bool = False  # refcounted prompt-block sharing (paged;
                                 # implies chunked prefill)
+    n_spec: int = 0         # >0: self-speculative decoding — draft n_spec
+                            # tokens per round with the quantized
+                            # ``draft_params`` tree, verify with one
+                            # full-precision forward (paged only; pass
+                            # draft_params= to Engine)
     check_invariants: bool = False  # assert allocator conservation after
                                     # every admission/dispatch (tests; slow)
 
@@ -103,7 +118,7 @@ class Engine:
     """Continuous-batching serving engine over a built :class:`Model`."""
 
     def __init__(self, model: Model, params, cfg: EngineConfig | None = None,
-                 *, mesh=None, **kw):
+                 *, mesh=None, draft_params=None, **kw):
         if cfg is None:
             cfg = EngineConfig(**kw)
         elif kw:
@@ -132,6 +147,48 @@ class Engine:
             raise ValueError(f"k_steps must be >= 1, got {K}")
         if (cfg.chunk_size or cfg.prefix_cache) and not cfg.paged:
             raise ValueError("chunk_size / prefix_cache need paged=True")
+        if cfg.n_spec:
+            if not cfg.paged:
+                raise ValueError(
+                    "speculative decoding (n_spec > 0) rides the paged "
+                    "engine: pass paged=True")
+            if cfg.chunk_size or cfg.prefix_cache:
+                raise ValueError(
+                    "speculative decoding does not compose with chunked "
+                    "prefill / prefix caching yet: drop chunk_size / "
+                    "prefix_cache, or n_spec")
+            if cfg.n_spec >= K:
+                raise ValueError(
+                    f"n_spec must be < k_steps (got n_spec={cfg.n_spec}, "
+                    f"k_steps={K}): the dispatch runs k_steps speculative "
+                    f"rounds and sizes its token grid k_steps*(n_spec+1) — "
+                    f"raise k_steps or lower n_spec")
+            if draft_params is None:
+                raise ValueError(
+                    "speculative decoding needs draft_params: a quantized "
+                    "copy of the serving weights, e.g. repro.quantize("
+                    "params, base, qcfg, mode='storage')[0]")
+            if mcfg.sliding_window and cfg.n_spec + 1 > mcfg.sliding_window:
+                raise ValueError(
+                    f"n_spec + 1 ({cfg.n_spec + 1}) must fit inside the "
+                    f"sliding window ({mcfg.sliding_window}): a round's "
+                    f"verify span may not wrap the whole ring")
+            has_moe = (mcfg.family == "moe"
+                       or (mcfg.family == "hybrid" and mcfg.moe_every))
+            if has_moe and mcfg.capacity_factor * mcfg.top_k < mcfg.n_experts:
+                raise ValueError(
+                    f"speculative verify routes MoE dropless, but this "
+                    f"config's decode path can drop tokens "
+                    f"(capacity_factor {mcfg.capacity_factor} * top_k "
+                    f"{mcfg.top_k} < n_experts {mcfg.n_experts}), so greedy "
+                    f"speculative output could diverge from the "
+                    f"non-speculative engine when an expert queue "
+                    f"overflows.  Serve dropless (capacity_factor >= "
+                    f"n_experts / top_k) to speculate — what a serving "
+                    f"engine wants regardless")
+        elif draft_params is not None:
+            raise ValueError("draft_params without n_spec > 0 does nothing: "
+                             "set n_spec to enable speculative decoding")
         if cfg.paged:
             window = mcfg.sliding_window
             cap = min(cfg.cache_len, window) if window else cfg.cache_len
@@ -139,6 +196,11 @@ class Engine:
                 raise ValueError(
                     f"paged SWA serving needs cache_len >= sliding_window "
                     f"({cfg.cache_len} < {window})")
+            if window and window % cfg.block_size:
+                raise ValueError(
+                    f"block_size {cfg.block_size} must divide the sliding "
+                    f"window {window}: ring positions are block-mapped "
+                    f"(pos % window straddles the block grid otherwise)")
             self._mb = P.blocks_for(cap, cfg.block_size)  # blocks per slot
             self._num_blocks = cfg.num_blocks or cfg.slots * self._mb
         if cfg.chunk_size:
@@ -163,6 +225,13 @@ class Engine:
             make_decode_dispatch(model, sp, K, paged=cfg.paged,
                                  cow=cfg.prefix_cache),
             donate_argnums=(1, 2))
+        if cfg.n_spec:
+            self._draft_params = (self._place_params(draft_params)
+                                  if mesh is not None else draft_params)
+            self._dispatch_spec = jax.jit(
+                make_decode_dispatch(model, sp, K, paged=True,
+                                     n_spec=cfg.n_spec),
+                donate_argnums=(2, 3))
         if cfg.chunk_size:
             self._dispatch_chunk = jax.jit(
                 make_decode_dispatch(model, sp, K, paged=True,
@@ -449,10 +518,12 @@ class Engine:
         """Worst-case pool blocks one request can ever hold: SWA rings page
         the whole window; dense requests write ``prompt + gen - 1`` cache
         rows over their lifetime (capacity-clamped, like the contiguous
-        cache drops overflow writes)."""
+        cache drops overflow writes).  Speculative rounds overshoot by up
+        to ``n_spec`` rows past the budget before rolling back (the last
+        round's span), so the reservation covers that transient too."""
         if self.model.cfg.sliding_window:
             return self._mb
-        return min(P.blocks_for(prompt_len + gen_tokens - 1,
+        return min(P.blocks_for(prompt_len + gen_tokens - 1 + self.cfg.n_spec,
                                 self.cfg.block_size), self._mb)
 
     def serve(self, requests, *, gen_tokens: int, seed: int | None = None,
@@ -465,6 +536,8 @@ class Engine:
         requests = [jnp.asarray(r, jnp.int32).reshape(-1) for r in requests]
         stats = {"host_syncs": 0, "dispatches": 0, "prefill_calls": 0,
                  "decode_steps": 0, "tokens": 0, "prefill_tokens": 0}
+        if cfg.n_spec:
+            stats.update(spec_rounds=0, draft_tokens=0, draft_accepted=0)
         if gen_tokens < 1 or not requests:
             return ([], stats) if return_stats else []
         if cfg.chunk_size:
@@ -544,9 +617,17 @@ class Engine:
                 continue
 
             key, sub = jax.random.split(key)
-            state, cache, toks, emitted = self._dispatch(
-                self.params, state, cache, sub)
-            toks_h, em_h = jax.device_get((toks, emitted))
+            if cfg.n_spec:
+                state, cache, toks, emitted, counts = self._dispatch_spec(
+                    self.params, self._draft_params, state, cache, sub)
+                toks_h, em_h, c = jax.device_get((toks, emitted, counts))
+                stats["draft_tokens"] += int(c[0])
+                stats["draft_accepted"] += int(c[1])
+                stats["spec_rounds"] += K
+            else:
+                state, cache, toks, emitted = self._dispatch(
+                    self.params, state, cache, sub)
+                toks_h, em_h = jax.device_get((toks, emitted))
             stats["host_syncs"] += 1
             stats["dispatches"] += 1
             stats["decode_steps"] += K

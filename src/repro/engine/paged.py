@@ -263,6 +263,53 @@ def admit_slot(bstate: dict, slot, shared_ids: jnp.ndarray, n_shared,
             "slot_active": active}, pop_ids
 
 
+def alloc_span(bstate: dict, lengths: jnp.ndarray, width: int,
+               block_size: int, cap: int, ring: bool) -> dict:
+    """Ensure each active slot's table covers rows ``[lengths[b],
+    lengths[b] + width)`` — the speculative round's write span (engine/
+    spec.py): the draft writes up to ``width - 1`` rows past the slot's
+    length and the verify forward one more, so the blocks are popped *once*
+    per round here and every write inside the round (draft ``alloc_step``
+    calls included) then finds its entry allocated and pops nothing.
+
+    Rows at or beyond ``cap`` need no block (their writes trash-route, and
+    the engine only emits tokens whose positions fit).  Ring (SWA) tables
+    are fully allocated at admission, so the ring case is a no-op.  Pool
+    exhaustion leaves entries unallocated (writes then trash-route); the
+    engine's reservation ledger counts the speculative span into each
+    slot's worst case, so that path is unreachable in normal operation.
+    Blocks stay in the slot's table after a rejection rolls the length
+    back — the slot grows into them, and ``release_slots`` returns them
+    when it drains.
+    """
+    if ring:
+        return bstate
+    tbl, free, n_free = bstate["tbl"], bstate["free"], bstate["n_free"]
+    ref = bstate["ref"]
+    B, MB = tbl.shape
+    trash = free.shape[0]
+    nbl = width // block_size + 2            # static: span-straddle bound
+    jj = jnp.arange(nbl)[None, :]            # [1, nbl]
+    j = lengths[:, None] // block_size + jj  # candidate table entries
+    jc = jnp.clip(j, 0, MB - 1)
+    in_span = (j * block_size < jnp.minimum(lengths[:, None] + width, cap)) \
+        & (j < MB)
+    cur = jnp.take_along_axis(tbl, jc, axis=1)
+    need = bstate["slot_active"][:, None] & in_span & (cur < 0)
+    k = jnp.cumsum(need.reshape(-1).astype(jnp.int32)).reshape(B, nbl)
+    ok = need & (k <= n_free)
+    ids = free[jnp.clip(n_free - k, 0, trash - 1)]
+    new_rows = jnp.where(ok, ids, cur)
+    # per-row candidate entries ``j`` are distinct, so the scatter has no
+    # duplicate targets; out-of-table entries drop, untouched entries
+    # rewrite their own value
+    tbl = tbl.at[jnp.arange(B)[:, None], j].set(
+        jnp.where(in_span, new_rows, cur), mode="drop")
+    ref = ref.at[jnp.where(ok, ids, trash)].set(1, mode="drop")
+    n_free = n_free - jnp.sum(ok.astype(jnp.int32))
+    return {**bstate, "tbl": tbl, "ref": ref, "n_free": n_free}
+
+
 # ---------------------------------------------------------------------------
 # Prefill-chunk write routing (no allocation: admission preallocated)
 # ---------------------------------------------------------------------------

@@ -85,13 +85,21 @@ def _keep_rows(new_cache: dict, old_cache: dict, keep) -> dict:
 
 def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
                          *, paged: bool = False, cow: bool = False,
-                         chunk: int = 0):
+                         chunk: int = 0, n_spec: int = 0):
     """Build the jitted K-step decode dispatch.
 
     ``dispatch(params, state, cache, key)`` -> (state, cache, tokens [B, K],
     emitted [B, K] bool).  ``emitted[b, j]`` marks tokens produced while slot
     ``b`` was still active; it is a contiguous prefix per row, so the host
     can append ``tokens[b, emitted[b]]`` verbatim.
+
+    ``n_spec > 0`` swaps each scan step for a **speculative round** (draft
+    ``n_spec`` tokens with a quantized tree, verify with one full-precision
+    forward — engine/spec.py): the returned dispatch then takes an extra
+    ``draft_params`` argument after ``params`` and its grids widen to
+    ``[B, k_steps * (n_spec + 1)]``, plus a trailing ``(drafted, accepted)``
+    counter pair.  Speculation requires the paged cache and does not
+    compose with in-scan chunked prefill or copy-on-write sharing.
 
     With ``paged=True`` the cache is the paged block pool
     (``model.init_paged_cache``): each step runs ``decode_step_paged`` (which
@@ -103,6 +111,13 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
     module docstring); extra state fields ride through untouched either way,
     so the same state pytree serves both dispatch flavors.
     """
+    if n_spec:
+        if not paged or chunk or cow:
+            raise NotImplementedError(
+                "speculative dispatch needs the plain paged cache path "
+                "(no chunked prefill / copy-on-write)")
+        from repro.engine.spec import make_spec_dispatch
+        return make_spec_dispatch(model, sp, k_steps, n_spec)
     if not paged:
         step_fn = model.decode_step
     else:

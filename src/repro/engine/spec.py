@@ -1,0 +1,239 @@
+"""Self-speculative decoding: the quantized param tree drafts, the
+full-precision tree verifies — inside one jitted K-round dispatch.
+
+DAQ's claim is that delta-aware quantization preserves the *behavior* the
+fine-tune encoded in small-magnitude ΔW, not just per-tensor reconstruction
+error.  This subsystem operationalizes that claim in the serving hot path:
+the quantized model (any ``repro.quantize`` registry method — ``daq``,
+``absmax``, …) autoregressively drafts ``n_spec`` tokens, one multi-token
+verify forward of the full-precision model scores them all, and a prefix is
+accepted.  The **draft acceptance rate** is then a data-free, end-to-end,
+token-level behavioral-fidelity metric for the quantization method — and
+every accepted draft is a decode step the verifier never had to run
+serially, so it is also a tok/s win wherever a C-token forward costs less
+than C single-token forwards (every memory-bound accelerator).
+
+One speculative **round** (one step of the K-step dispatch scan):
+
+1. **span allocation** — ``paged.alloc_span`` pops the blocks covering the
+   round's write span ``[len, len + n_spec + 1)`` once, so neither the
+   draft steps nor the verify forward allocate (SWA rings are fully
+   allocated at admission already).
+2. **draft** — ``n_spec`` ordinary ``decode_step_paged`` calls with the
+   quantized tree, scanned on a working copy of the cache.  The draft
+   reads the verifier's (full-precision) KV for all history and its own
+   fresh rows for the current round; its writes land in the same span the
+   verify forward overwrites, so no draft-quality KV ever survives a round.
+3. **verify** — one ``model.verify_chunk_paged`` forward of the
+   full-precision tree over ``[cur, d_1 .. d_n]`` returns logits at every
+   position, each row a bitwise mirror of the decode step the
+   non-speculative engine would have run (decode-softmax attention over
+   the gathered table, exact per-token SSM recurrence — models/lm.py).
+4. **accept** — greedy: the longest prefix with ``argmax(p_i) == d_i``,
+   then the verifier's own argmax as correction/bonus.  Sampled: lossless
+   rejection sampling over the *warped* (temperature/top-k/top-p)
+   distributions — accept ``d_i`` with prob ``min(1, p_i(d)/q_i(d))``,
+   sample the first rejection from ``norm(max(p - q, 0))``, the
+   all-accepted bonus from ``p_{n+1}`` — so emitted tokens are distributed
+   exactly as non-speculative sampling (pinned by an unbiasedness test).
+5. **rollback** — rejected positions roll back per slot: ``lengths``
+   rewinds to the accepted point (stale KV rows beyond it are masked by
+   every later read and overwritten by later writes; their blocks stay in
+   the slot's table for the slot to grow into).  Families with recurrent
+   or ring state (SSM / hybrid / SWA) cannot rewind by masking alone, so
+   they run a **second** verify pass with ``valid = accepted`` over the
+   pre-round cache — recomputing exactly the accepted rows' state — while
+   pure linear-attention stacks (dense / MoE) keep the first pass's cache
+   and only rewind ``lengths``.
+
+Guarantee: greedy speculative output is **token-exact** against the
+non-speculative paged engine (and therefore the contiguous engine and the
+legacy host loop) for any draft tree whatsoever — the draft only decides
+how many verifier-identical tokens emit per round, never their values.
+
+Budget clamp: a round may accept more tokens than the slot's remaining
+budget; emission is clamped (``min(accepted + 1, remaining)``) and every
+clamped-away position is provably beyond the request's final token, so the
+clamp never changes emitted values.  Acceptance counters report the raw
+verifier-agreement prefix (the fidelity metric), not the clamped emission.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.paged import BSTATE_KEYS, alloc_span, release_slots
+from repro.engine.sampler import SamplingParams, probs, sample
+from repro.models.lm import Model
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rules (pure, unit-testable)
+# ---------------------------------------------------------------------------
+
+def greedy_accept(drafts: jnp.ndarray, p_logits: jnp.ndarray):
+    """Greedy prefix acceptance.
+
+    ``drafts`` [B, n] proposed tokens; ``p_logits`` [B, n+1, V] verifier
+    logits (row ``i`` scores proposal ``i``; row ``n`` is the bonus
+    position).  Returns ``(out [B, n+1], n_acc [B])``: rows ``< n_acc`` of
+    ``out`` are the accepted drafts, row ``n_acc`` the verifier's own
+    argmax (the correction after a mismatch, or the bonus token when all
+    drafts matched); rows past that are don't-care.
+    """
+    B, n1 = p_logits.shape[:2]
+    n = n1 - 1
+    tgt = jnp.argmax(p_logits, axis=-1).astype(jnp.int32)       # [B, n+1]
+    match = (tgt[:, :n] == drafts).astype(jnp.int32)
+    a = jnp.sum(jnp.cumprod(match, axis=1), axis=1)             # [B] 0..n
+    out = jnp.concatenate([drafts, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    fix = jnp.take_along_axis(tgt, a[:, None], axis=1)[:, 0]
+    return out.at[jnp.arange(B), a].set(fix), a
+
+
+def rejection_accept(key, drafts: jnp.ndarray, q_logits: jnp.ndarray,
+                     p_logits: jnp.ndarray, sp: SamplingParams):
+    """Lossless speculative rejection sampling (Leviathan et al.) over the
+    **warped** draft/target distributions.
+
+    ``drafts`` [B, n] were sampled from ``probs(q_logits, sp)``; draft ``i``
+    is accepted with probability ``min(1, p_i(d_i) / q_i(d_i))``, the first
+    rejection is resampled from ``norm(max(p_i - q_i, 0))``, and the
+    all-accepted case draws the bonus token from ``p_{n+1}`` (the same
+    formula with ``q := 0``).  The emitted-token distribution equals plain
+    sampling from the warped target — pinned by a frequency test.
+    Returns ``(out [B, n+1], n_acc [B])`` like :func:`greedy_accept`.
+    """
+    B, n1, V = p_logits.shape
+    n = n1 - 1
+    qp = probs(q_logits, sp)                                    # [B, n, V]
+    pp = probs(p_logits, sp)                                    # [B, n+1, V]
+    pd = jnp.take_along_axis(pp[:, :n], drafts[..., None], axis=-1)[..., 0]
+    qd = jnp.take_along_axis(qp, drafts[..., None], axis=-1)[..., 0]
+    ku, kr = jax.random.split(key)
+    u = jax.random.uniform(ku, (B, n))
+    accept = (u * qd < pd).astype(jnp.int32)    # P[accept] = min(1, p/q)
+    a = jnp.sum(jnp.cumprod(accept, axis=1), axis=1)            # [B] 0..n
+    pa = jnp.take_along_axis(pp, a[:, None, None], axis=1)[:, 0]
+    q_ext = jnp.concatenate([qp, jnp.zeros((B, 1, V), qp.dtype)], axis=1)
+    qa = jnp.take_along_axis(q_ext, a[:, None, None], axis=1)[:, 0]
+    r = jnp.maximum(pa - qa, 0.0)
+    z = jnp.sum(r, axis=-1, keepdims=True)
+    r = jnp.where(z > 0, r / z, pa)             # p == q numerically: use p
+    tail = jax.random.categorical(kr, jnp.log(jnp.maximum(r, 1e-38)),
+                                  axis=-1).astype(jnp.int32)
+    out = jnp.concatenate([drafts, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    return out.at[jnp.arange(B), a].set(tail), a
+
+
+# ---------------------------------------------------------------------------
+# The K-round speculative dispatch
+# ---------------------------------------------------------------------------
+
+def make_spec_dispatch(model: Model, sp: SamplingParams, k_steps: int,
+                       n_spec: int):
+    """Build the jitted K-round speculative dispatch.
+
+    ``dispatch(params, draft_params, state, cache, key)`` ->
+    ``(state, cache, tokens [B, K*(n_spec+1)], emitted [B, K*(n_spec+1)],
+    counts [2])`` — ``emitted[b]`` marks the tokens slot ``b`` really
+    produced (a contiguous prefix per round, rounds concatenated in order,
+    so the host appends ``tokens[b, emitted[b]]`` verbatim, exactly like
+    the plain dispatch's grid).  ``counts`` is ``(drafted, accepted)``
+    summed over rounds and slots — the acceptance-rate telemetry.
+
+    The same ``state`` pytree as the plain dispatch is used (``cur`` /
+    ``active`` / ``remaining``); blocks of slots that drain mid-dispatch
+    are pushed back inside the scan, as in the non-speculative path.
+    """
+    if model.decode_step_paged is None or model.verify_chunk_paged is None:
+        raise NotImplementedError(
+            f"model family {model.cfg.family!r} has no paged decode/verify "
+            f"path")
+    mcfg = model.cfg
+    # SSM state is recurrent and SWA rings are position-keyed: rejected
+    # rows cannot be rewound by masking, so those families re-run the
+    # verify with valid = accepted over the pre-round cache (pass 2)
+    two_pass = mcfg.family in ("ssm", "hybrid") or bool(mcfg.sliding_window)
+    S1 = n_spec + 1
+
+    def dispatch(params, draft_params, state, cache, key):
+        B = state["active"].shape[0]
+
+        def round_body(carry, step_key):
+            st, cache = carry
+            active = st["active"]
+            lengths = cache["lengths"]
+            # ---- 1. span allocation (once per round) --------------------
+            leaf = next((l for l in cache["stack"].values() if "pk" in l),
+                        None)
+            if leaf is not None:
+                bs = leaf["pk"].shape[2]
+                cap = cache["tbl"].shape[1] * bs
+                ring = bool(mcfg.sliding_window) and cap == mcfg.sliding_window
+                bstate = alloc_span({k: cache[k] for k in BSTATE_KEYS},
+                                    lengths, S1, bs, cap, ring)
+                cache = {**cache, **bstate}
+            # ---- 2. draft (quantized tree, working cache copy) ----------
+            def draft_body(dc, dk):
+                dcache, cur = dc
+                logits, dcache = model.decode_step_paged(draft_params, cur,
+                                                         dcache)
+                nxt = sample(logits, dk, sp)
+                return (dcache, nxt[:, None]), (nxt, logits)
+
+            dkeys = jax.random.split(jax.random.fold_in(step_key, 0), n_spec)
+            (dcache, _), (dtoks, dlogits) = jax.lax.scan(
+                draft_body, (cache, st["cur"]), dkeys)
+            drafts = dtoks.T                                    # [B, n]
+            # ---- 3. verify (full-precision tree, one forward) -----------
+            vtoks = jnp.concatenate([st["cur"], drafts], axis=1)
+            vvalid = jnp.where(active, S1, 0)
+            # one-pass families reuse the draft's cache (its span rows are
+            # fully overlaid/overwritten by the verify); two-pass families
+            # must keep the pre-round cache for the commit pass
+            vc_in = {**(cache if two_pass else dcache), "lengths": lengths}
+            v_logits, vcache = model.verify_chunk_paged(
+                params, vtoks, vc_in, lengths, vvalid)
+            # ---- 4. accept ----------------------------------------------
+            if sp.greedy:
+                out, a = greedy_accept(drafts, v_logits)
+            else:
+                out, a = rejection_accept(
+                    jax.random.fold_in(step_key, 1), drafts,
+                    dlogits.transpose(1, 0, 2), v_logits, sp)
+            m = jnp.where(active, jnp.minimum(a + 1, st["remaining"]), 0)
+            # ---- 5. commit + rollback -----------------------------------
+            new_len = jnp.where(active, lengths + m, lengths)
+            if two_pass:
+                _, ccache = model.verify_chunk_paged(
+                    params, vtoks, {**cache, "lengths": lengths}, lengths,
+                    m)
+                cache = {**ccache, "lengths": new_len}
+            else:
+                cache = {**vcache, "lengths": new_len}
+            # ---- 6. emit + budget ---------------------------------------
+            em = active[:, None] & (jnp.arange(S1)[None, :] < m[:, None])
+            cur = jnp.take_along_axis(out, jnp.maximum(m - 1, 0)[:, None],
+                                      axis=1)
+            cur = jnp.where(active[:, None], cur, st["cur"])
+            remaining = st["remaining"] - m
+            new_active = active & (remaining > 0)
+            # ---- 7. recycle drained slots' blocks in-scan ---------------
+            bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
+                                   active & ~new_active)
+            cache = {**cache, **bstate}
+            st = {**st, "cur": cur, "active": new_active,
+                  "remaining": remaining}
+            drafted = jnp.sum(jnp.where(active, n_spec, 0))
+            accepted = jnp.sum(jnp.where(active, a, 0))
+            return (st, cache), (out, em, drafted, accepted)
+
+        keys = jax.random.split(key, k_steps)
+        (state, cache), (toks, em, dr, ac) = jax.lax.scan(
+            round_body, (state, cache), keys)
+        toks = toks.transpose(1, 0, 2).reshape(B, k_steps * S1)
+        em = em.transpose(1, 0, 2).reshape(B, k_steps * S1)
+        return state, cache, toks, em, jnp.stack([jnp.sum(dr), jnp.sum(ac)])
+
+    return dispatch

@@ -19,12 +19,20 @@ only parses flags, builds (and optionally quantizes) the model, and calls
   size N (``launch/mesh.make_host_mesh``) and places params + cache with
   the ``launch/sharding`` specs; quantized ``wq/data`` / ``wq/scale``
   leaves inherit the dense weight's layout.
+* **Speculative decoding** — ``--spec-draft METHOD --n-spec N`` (with
+  ``--paged``) quantizes the weights with METHOD and serves them as the
+  *draft* model: N drafted tokens per round, verified by one forward of
+  the full-precision weights (engine/spec.py).  Greedy output is
+  token-exact vs non-speculative serving; the summary line reports the
+  draft acceptance rate — a data-free behavioral-fidelity readout of the
+  quantization method.
 
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
       --requests 6 --batch 2 --prompt-len 16 --gen 8 --k-steps 8 \
       [--daq [--method daq] [--base-ckpt experiments/study/base]] \
-      [--temperature 0.8 --top-k 40] [--mesh 1]
+      [--paged --spec-draft daq --n-spec 4] \
+      [--temperature 0.8 --top-k 40 --top-p 0.95] [--mesh 1]
 """
 from __future__ import annotations
 
@@ -101,6 +109,9 @@ def main() -> None:
                     help="sampling temperature; 0 = greedy (default)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k truncation for sampling (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus (top-p) truncation for sampling "
+                         "(1.0 = off)")
     ap.add_argument("--mesh", type=int, default=0, metavar="MP",
                     help="serve sharded over a host mesh with "
                          "model-parallel size MP (0 = unsharded)")
@@ -122,20 +133,44 @@ def main() -> None:
                          "leading blocks are mapped instead of re-prefilled "
                          "and stay cached (LRU) after requests finish "
                          "(with --paged; implies chunked prefill)")
+    ap.add_argument("--spec-draft", default="", metavar="METHOD",
+                    help="self-speculative decoding: quantize the weights "
+                         "with METHOD (repro.quantize registry key, e.g. "
+                         "daq | absmax) and use them as the draft model, "
+                         "verified by the full-precision weights (requires "
+                         "--paged)")
+    ap.add_argument("--n-spec", type=int, default=4,
+                    help="drafted tokens per speculative round (with "
+                         "--spec-draft; must be < --k-steps)")
     ap.add_argument("--daq", action="store_true",
                     help="serve fp8-quantized weights (repro.quantize)")
     ap.add_argument("--metric", default="sign")
-    ap.add_argument("--method", default="daq",
-                    help="quantization method registry key "
-                         "(daq | absmax | daq-per-block | ...)")
+    ap.add_argument("--method", default=None,
+                    help="quantization method registry key for --daq "
+                         "serving (daq | absmax | daq-per-block | ...); "
+                         "default daq.  The speculative draft's method is "
+                         "--spec-draft's value, not this flag")
     ap.add_argument("--base-ckpt", default="",
                     help="checkpoint dir of the BASE model for delta-aware "
                          "quantization (loaded via repro.checkpoint)")
     args = ap.parse_args()
-    if not args.daq and (args.base_ckpt or args.method != "daq"
-                         or args.metric != "sign"):
+    if not args.daq and not args.spec_draft \
+            and (args.base_ckpt or args.method is not None
+                 or args.metric != "sign"):
         raise SystemExit("--method/--metric/--base-ckpt configure quantized "
-                         "serving and require --daq")
+                         "serving and require --daq (or --spec-draft)")
+    if args.spec_draft and args.method is not None:
+        raise SystemExit("--method configures --daq serving and is not "
+                         "read by the speculative path: the draft's "
+                         "quantization method IS --spec-draft's value "
+                         f"({args.spec_draft!r}) — drop --method")
+    if args.spec_draft and args.daq:
+        raise SystemExit("--spec-draft verifies quantized drafts against "
+                         "the FULL-precision weights; it cannot combine "
+                         "with --daq (which quantizes the served weights)")
+    if args.spec_draft and not args.paged:
+        raise SystemExit("--spec-draft requires --paged (speculative "
+                         "decoding rides the paged engine)")
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -149,7 +184,7 @@ def main() -> None:
     spec = LanguageSpec(vocab=cfg.vocab_size)
     if args.daq:
         from repro.quantize import quantize
-        qcfg = QuantConfig(method=args.method, metric=args.metric,
+        qcfg = QuantConfig(method=args.method or "daq", metric=args.metric,
                            granularity="channel")
         base = _load_base_params(args.base_ckpt, params)
         # model=/spec= feed the calibrate hook of calibration-based
@@ -157,6 +192,17 @@ def main() -> None:
         params, report = quantize(params, base, qcfg, mode="storage",
                                   out_dtype="bfloat16", model=model,
                                   spec=spec)
+        print(report.summary())
+    draft_params = None
+    if args.spec_draft:
+        from repro.quantize import quantize
+        qcfg = QuantConfig(method=args.spec_draft, metric=args.metric,
+                           granularity="channel")
+        base = _load_base_params(args.base_ckpt, params)
+        draft_params, report = quantize(params, base, qcfg, mode="storage",
+                                        out_dtype="bfloat16", model=model,
+                                        spec=spec)
+        print(f"[serve] speculative draft ({args.spec_draft}):")
         print(report.summary())
     prompts = [sample_batch(jax.random.PRNGKey(i), spec, 1,
                             args.prompt_len)[0] for i in range(args.requests)]
@@ -167,20 +213,22 @@ def main() -> None:
         from repro.launch.mesh import make_host_mesh, mesh_info
         mesh = make_host_mesh(model=args.mesh)
         print(f"[serve] host mesh: {mesh_info(mesh)}")
-    if args.temperature <= 0 and args.top_k == 0:
+    if args.temperature <= 0 and args.top_k == 0 and args.top_p >= 1.0:
         sp = SamplingParams()                        # greedy
-    else:  # either flag alone enables sampling (temperature defaults to 1)
+    else:  # any flag alone enables sampling (temperature defaults to 1)
         sp = SamplingParams(greedy=False,
                             temperature=args.temperature
                             if args.temperature > 0 else 1.0,
-                            top_k=args.top_k)
+                            top_k=args.top_k, top_p=args.top_p)
     if (args.chunk_size or args.prefix_cache) and not args.paged:
         raise SystemExit("--chunk-size/--prefix-cache require --paged")
     eng = Engine(model, params, slots=args.batch, cache_len=cache_len,
                  k_steps=args.k_steps, sampling=sp, mesh=mesh,
                  paged=args.paged, block_size=args.block_size,
                  num_blocks=args.num_blocks, chunk_size=args.chunk_size,
-                 prefix_cache=args.prefix_cache)
+                 prefix_cache=args.prefix_cache,
+                 n_spec=args.n_spec if args.spec_draft else 0,
+                 draft_params=draft_params)
 
     t0 = time.time()
     outs, stats = eng.serve(prompts, gen_tokens=args.gen, return_stats=True)
@@ -189,13 +237,22 @@ def main() -> None:
     kind = "paged" if args.paged else "contiguous"
     if args.prefix_cache:
         kind += "+prefix"
+    if args.spec_draft:
+        kind += f"+spec({args.spec_draft})"
     extra = ""
     if args.paged and (args.chunk_size or args.prefix_cache):
         extra = (f", {stats['prefill_tokens']} prompt tokens prefilled"
                  + (f" ({stats.get('prefix_hits', 0)} prefix-hit)"
                     if args.prefix_cache else ""))
+    if args.spec_draft:
+        acc = (stats["draft_accepted"] / stats["draft_tokens"]
+               if stats["draft_tokens"] else 0.0)
+        extra += (f", draft acceptance {acc:.1%} "
+                  f"({stats['draft_accepted']}/{stats['draft_tokens']} over "
+                  f"{stats['spec_rounds']} rounds of {args.n_spec})")
     print(f"served {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s; {stats['host_syncs']} host syncs, "
+          f"({n_tok/dt:.1f} tok/s, "
+          f"{stats['host_syncs']/max(n_tok, 1):.3f} host syncs/token; "
           f"{stats['dispatches']} dispatches of {args.k_steps} steps, "
           f"{stats['prefill_calls']} prefill calls; {kind} cache, "
           f"{stats['cache_bytes']} cache bytes{extra})")

@@ -237,6 +237,91 @@ def paged_prefill_attention(q, pk, pv, k_new, v_new, tbl, start, valid, *,
                              kv_offsets=kv_off, kv_lengths=n_valid)
 
 
+def paged_verify_attention(q, pk, pv, k_new, v_new, tbl, start, valid, *,
+                           sliding_window=0, softcap=0.0) -> jnp.ndarray:
+    """Multi-token *verify* attention against the paged cache: row ``j`` of
+    the chunk reproduces :func:`decode_attention` at position ``start + j``
+    **operation for operation**.
+
+    The speculative decoder (engine/spec.py) accepts a drafted token only
+    when the verifier's logits agree with what the non-speculative engine
+    would have computed at the same position — so unlike
+    :func:`paged_prefill_attention` (flash tiles, online softmax), this
+    path assembles the same kv buffer a decode step would see (block-table
+    gather in slot order, fresh rows overlaid in pool dtype, the exact
+    length/ring masks) and runs the plain-softmax decode math batched over
+    the ``C`` chunk rows, keeping greedy speculative serving token-exact
+    against per-token decode.  Memory is O(C * cap) per head group (ring:
+    O(C * W) buffers) — the chunk is ``n_spec + 1`` rows, so this stays
+    small; a production flash verify would trade the bitwise-decode mirror
+    for tile math.
+    """
+    from repro.engine.paged import gather_blocks
+    B, C = k_new.shape[:2]
+    bs = pk.shape[1]
+    MB = tbl.shape[1]
+    cap = MB * bs
+    H, hd = q.shape[2], q.shape[3]
+    Kv = k_new.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, C, Kv, G, hd)
+    k_new = k_new.astype(pk.dtype)       # decode writes land in pool dtype
+    v_new = v_new.astype(pv.dtype)
+    ring = bool(sliding_window) and cap == sliding_window
+    rows = jnp.arange(C)[None, :, None]                     # [1, C, 1]
+    if ring:
+        W = sliding_window
+        slots = jnp.arange(W)[None, :]                      # [1, W]
+        blk = tbl[:, (slots // bs)[0]]                      # [B, W]
+        gk, gv = pk[blk, (slots % bs)[0]], pv[blk, (slots % bs)[0]]
+        i_s = (slots - start[:, None]) % W                  # writing row
+        fresh = (i_s[:, None, :] <= rows) & (i_s[:, None, :] < C)
+        idx = jnp.clip(i_s, 0, C - 1)
+        kf = jnp.take_along_axis(k_new, idx[..., None, None], axis=1)
+        vf = jnp.take_along_axis(v_new, idx[..., None, None], axis=1)
+        fm = fresh[..., None, None]                         # [B, C, W, 1, 1]
+        kbuf = jnp.where(fm, kf[:, None], gk[:, None])      # [B,C,W,Kv,hd]
+        vbuf = jnp.where(fm, vf[:, None], gv[:, None])
+        eff = jnp.minimum(start[:, None] + rows[0, :, 0][None] + 1, W)
+        mask = slots[:, None, :] < eff[..., None]           # [B, C, W]
+        if kbuf.dtype.itemsize == 1:                        # fp8 cache
+            kbuf = kbuf.astype(jnp.bfloat16)
+            vbuf = vbuf.astype(jnp.bfloat16)
+        s = jnp.einsum("bqkgh,bqckh->bkgqc", qg, kbuf,
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqc,bqckh->bqkgh", p.astype(vbuf.dtype), vbuf,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, C, H, hd).astype(q.dtype)
+    # linear layout: one shared buffer — a row's own/later positions are
+    # overlaid fresh, and the per-row length mask hides rows past it (the
+    # exact mask decode_attention applies)
+    pos = jnp.broadcast_to(jnp.arange(cap)[None], (B, cap))
+    gk, gv = gather_blocks(pk, tbl), gather_blocks(pv, tbl)
+    rel = pos - start[:, None]
+    fresh = (rel >= 0) & (rel < C)
+    idx = jnp.clip(rel, 0, C - 1)[..., None, None]
+    fm = fresh[..., None, None]
+    kbuf = jnp.where(fm, jnp.take_along_axis(k_new, idx, axis=1), gk)
+    vbuf = jnp.where(fm, jnp.take_along_axis(v_new, idx, axis=1), gv)
+    if kbuf.dtype.itemsize == 1:                            # fp8 cache
+        kbuf = kbuf.astype(jnp.bfloat16)
+        vbuf = vbuf.astype(jnp.bfloat16)
+    s = _tile_scores(qg, kbuf, softcap)                     # [B,Kv,G,C,cap]
+    qpos = start[:, None] + jnp.arange(C)[None]             # [B, C]
+    mask = pos[:, None, :] < (qpos + 1)[..., None]          # [B, C, cap]
+    if sliding_window > 0:                                  # non-ring SWA
+        mask = mask & (pos[:, None, :] > (qpos[..., None] - sliding_window))
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bqkgh", p.astype(vbuf.dtype), vbuf,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H, hd).astype(q.dtype)
+
+
 def paged_decode_attention(q, pk, pv, tbl, lengths, *, sliding_window=0,
                            softcap=0.0) -> jnp.ndarray:
     """Decode attention against paged K/V pools.

@@ -138,8 +138,10 @@ def embed_tokens(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
 def lm_logits(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     if "w_head" in p:
         return qlinear.matmul(x, p["w_head"])
-    table = qlinear.resolve(p["embed"])
-    return jnp.matmul(x, table.T.astype(x.dtype))
+    # tied embedding: matmul_t keeps storage-mode tables quantized through
+    # the transpose (the speculative draft's per-step hot path) instead of
+    # dequantizing [V, D] every decode step
+    return qlinear.matmul_t(x, p["embed"])
 
 
 def last_token_logits(p: dict, x: jnp.ndarray,

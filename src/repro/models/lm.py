@@ -340,6 +340,65 @@ def apply_layer_prefill_paged(p: dict, x, cache: dict, pctx: dict,
     return x, cache
 
 
+def _attn_verify_paged(p, x, cache, pctx, cfg: ModelConfig):
+    """Self-attn over one speculative-verify chunk: row ``j`` mirrors a
+    decode step at position ``start[b] + j`` operation-for-operation
+    (attention.paged_verify_attention), then the chunk's rows land at the
+    precomputed span targets (pads / overflows route to trash)."""
+    B, C, _ = x.shape
+    q, k, v = A.qkv_proj(p, x, cfg)
+    if cfg.rope_theta > 0:
+        pos = pctx["start"][:, None] + jnp.arange(C)[None]
+        cos, sin = A.rope_cos_sin(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        q = A.apply_rope(q, cos, sin)
+        k = A.apply_rope(k, cos, sin)
+    r = _kv_eff(cfg) // cfg.n_kv_heads
+    if r > 1:  # repeat-sharded cache (see _kv_eff)
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    out = A.paged_verify_attention(q, cache["pk"], cache["pv"], k, v,
+                                   pctx["tbl"], pctx["start"], pctx["valid"],
+                                   sliding_window=cfg.sliding_window,
+                                   softcap=cfg.attn_logit_softcap)
+    pk, pv = A.write_paged_kv_span(cache["pk"], cache["pv"], k, v,
+                                   pctx["wblk"], pctx["woff"])
+    from repro.quant_runtime import qlinear
+    y = qlinear.matmul(out.reshape(B, C, -1), p["wo"])
+    return y, {**cache, "pk": pk, "pv": pv}
+
+
+def apply_layer_verify_paged(p: dict, x, cache: dict, pctx: dict,
+                             cfg: ModelConfig, spec: LayerSpec):
+    """Speculative-verify variant of :func:`apply_layer_decode_paged`: each
+    chunk row reproduces per-token decode bitwise — attention mirrors the
+    decode softmax over the gathered-and-overlaid table, Mamba/SSM layers
+    step the exact recurrence (ssm.mamba_verify_chunk), and capacity-routed
+    MoE runs dropless so the chunk batch (which mixes slots' rows and pad
+    garbage) cannot couple tokens through expert queues (outputs equal
+    decode's whenever decode's own routing doesn't overflow a queue, as
+    with chunked prefill)."""
+    mixer, ffn = spec
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    if mixer in ("attn", "enc_attn"):
+        y, cache = _attn_verify_paged(p["attn"], h, cache, pctx, cfg)
+        x = x + y
+    elif mixer == "mamba":
+        y, cache = SSM.mamba_verify_chunk(p["mamba"], x, h, cfg, cache,
+                                          pctx["valid"])
+        x = x + y
+    else:
+        raise ValueError(f"speculative verify not supported for mixer "
+                         f"{mixer!r}")
+    if ffn != "none":
+        h2 = apply_norm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = MOE.apply_moe(p["moe"], h2, cfg, full_capacity=True)
+            x = x + y
+        else:
+            x = x + apply_mlp(p["mlp"], h2)
+    return x, cache
+
+
 def apply_layer_decode_paged(p: dict, x, cache: dict, pctx: dict,
                              cfg: ModelConfig, spec: LayerSpec):
     """Paged variant of :func:`apply_layer_decode`; Mamba/SSM layers keep
@@ -551,6 +610,22 @@ def run_stack_prefill_paged(stack, cache, x, pctx, cfg, specs):
     return x, new_cache
 
 
+def run_stack_verify_paged(stack, cache, x, pctx, cfg, specs):
+    """Speculative-verify scan over the period stack (mirrors
+    :func:`run_stack_decode_paged`: write targets / table ride the
+    closure since all layers advance in lockstep)."""
+    def body(h, xs):
+        lp, lc = xs
+        nc = {}
+        for i, spec in enumerate(specs):
+            h, nci = apply_layer_verify_paged(lp[f"L{i}"], h, lc[f"L{i}"],
+                                              pctx, cfg, spec)
+            nc[f"L{i}"] = nci
+        return h, nc
+    x, new_cache = jax.lax.scan(body, x, (stack, cache))
+    return x, new_cache
+
+
 def run_stack_prefill(stack, x, cfg, specs, *, memory=None, cache_len=0):
     def body(h, lp):
         caches = {}
@@ -601,6 +676,12 @@ class Model:
                                  # (params, tokens [B,C], paged cache,
                                  #  start [B], valid [B]) ->
                                  #   (last-valid-row logits [B,V], cache)
+    verify_chunk_paged: Callable | None = None
+                                 # (params, tokens [B,C], paged cache,
+                                 #  start [B], valid [B]) ->
+                                 #   (all-row logits [B,C,V], cache);
+                                 #   row j bitwise-mirrors a decode step at
+                                 #   position start+j (speculative verify)
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -806,10 +887,51 @@ def build_model(cfg: ModelConfig) -> Model:
                                          pcache["lengths"])
         return logits, new_cache
 
+    def verify_chunk_paged(params, tokens, pcache, start, valid):
+        """Speculative-verify forward: consume ``tokens`` [B, C] (rows
+        ``start[b]..start[b]+valid[b]-1`` of each slot's continuation) and
+        return the logits of **every** row [B, C, V] plus the cache with
+        the rows' KV written and SSM state advanced by ``valid[b]`` steps.
+        Row ``j``'s logits bitwise-mirror what ``decode_step_paged`` would
+        have produced after consuming rows ``< j`` (attention runs the
+        decode softmax over the gathered table, SSM the exact per-token
+        recurrence), which is what makes greedy speculative decoding
+        token-exact against the non-speculative engine (engine/spec.py).
+        ``valid[b] == 0`` passes the slot through untouched; rows at or
+        beyond ``valid[b]`` are state no-ops with garbage logits."""
+        from repro.engine.paged import BSTATE_KEYS, span_targets
+        B, C = tokens.shape
+        x = embed_tokens(params["embed"], tokens)
+        start = start.astype(jnp.int32)
+        valid = valid.astype(jnp.int32)
+        pctx = {"start": start, "valid": valid}
+        new_cache = dict(pcache)
+        if _attn_idx is not None:
+            leaf = pcache["stack"][f"L{_attn_idx}"]["pk"]
+            bs = leaf.shape[2]
+            cap = pcache["tbl"].shape[1] * bs
+            ring = bool(cfg.sliding_window) and cap == cfg.sliding_window
+            bstate = {k: pcache[k] for k in BSTATE_KEYS}
+            wblk, woff = span_targets(bstate, start, valid, C, bs, cap,
+                                      ring)
+            pctx.update(tbl=bstate["tbl"], wblk=wblk, woff=woff)
+        if n_prefix:
+            x, new_cache["prefix"] = run_stack_verify_paged(
+                params["prefix"], pcache["prefix"], x, pctx, cfg,
+                prefix_specs)
+        x, new_cache["stack"] = run_stack_verify_paged(
+            params["stack"], pcache["stack"], x, pctx, cfg, specs)
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x)
+        new_cache["lengths"] = jnp.where(valid > 0, start + valid,
+                                         pcache["lengths"])
+        return logits, new_cache
+
     return Model(cfg, init, loss_fn, init_cache, prefill, decode_step,
                  init_paged_cache=init_paged_cache,
                  decode_step_paged=decode_step_paged,
-                 prefill_chunk_paged=prefill_chunk_paged)
+                 prefill_chunk_paged=prefill_chunk_paged,
+                 verify_chunk_paged=verify_chunk_paged)
 
 
 # ---------------------------------------------------------------------------

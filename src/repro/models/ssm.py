@@ -223,6 +223,49 @@ def mamba_prefill_chunk(p: dict, x_in: jnp.ndarray, h: jnp.ndarray,
     return out, {"h": h_fin, **conv_state}
 
 
+def mamba_verify_chunk(p: dict, x_in: jnp.ndarray, h: jnp.ndarray,
+                       cfg: ModelConfig, cache: dict, valid: jnp.ndarray):
+    """Speculative-verify chunk: the **exact recurrence**, stepped row by
+    row — a bitwise mirror of ``valid[b]`` successive :func:`mamba_decode`
+    calls (same projections, same conv, same per-step ``h = a h + dt x B^T``
+    update and einsum shapes), unlike :func:`mamba_prefill_chunk` whose SSD
+    chunk math reorders the float ops.  The speculative engine needs its
+    verifier logits (and the rolled-back state on rejection) to equal what
+    per-token decode would have produced, so the chunk here trades the SSD
+    matmul form for per-row decode parity; chunks are ``n_spec + 1`` rows,
+    so the sequential scan stays cheap.
+
+    Rows ``>= valid[b]`` are state no-ops (``dt = 0``: decay ``exp(0) = 1``,
+    update ``0``); slots with ``valid == 0`` pass state and conv history
+    through untouched.  Returns (out [B,C,D], new_cache) — output rows at
+    and beyond ``valid[b]`` are garbage, callers must mask.
+    """
+    Bsz, C, _ = h.shape
+    di = cfg.resolved_d_inner
+    z, xh, Bc, Cc, dt, conv_state = _project(p, h, cfg, cache, valid=valid)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh32 = xh.astype(jnp.float32)
+    vm = jnp.arange(C)[None, :] < valid[:, None]            # [B, C]
+    dt_m = jnp.where(vm[:, :, None], dt, 0.0)
+
+    def body(hst, xs):
+        xt, bt, ct, dtt = xs                   # [B,nh,P] [B,N] [B,N] [B,nh]
+        a = jnp.exp(A[None] * dtt)
+        dBx = jnp.einsum("bhp,bn,bh->bhpn", xt, bt.astype(jnp.float32), dtt)
+        hst = hst * a[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(jnp.float32), hst)
+        return hst, y
+
+    xs = (xh32.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2),
+          Cc.transpose(1, 0, 2), dt_m.transpose(1, 0, 2))
+    h_fin, ys = jax.lax.scan(body, cache["h"], xs)
+    y = ys.transpose(1, 0, 2, 3)                            # [B,C,nh,P]
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh32
+    y = _gated_norm(y.reshape(Bsz, C, di), z, p["norm_scale"])
+    out = qlinear.matmul(y.astype(x_in.dtype), p["out_proj"])
+    return out, {"h": h_fin, **conv_state}
+
+
 def init_mamba_cache(cfg: ModelConfig, batch: int) -> dict:
     di, N, nh, P = (cfg.resolved_d_inner, cfg.ssm_state, cfg.n_ssm_heads,
                     cfg.ssm_head_dim)

@@ -67,6 +67,38 @@ def matmul(x: jnp.ndarray, w, *, precision=None) -> jnp.ndarray:
     return jnp.matmul(x, w.astype(x.dtype), precision=precision)
 
 
+def matmul_t(x: jnp.ndarray, w) -> jnp.ndarray:
+    """``x @ w.T`` with ``w`` possibly quantized — the tied-embedding LM
+    head (``x [..., D] @ table[V, D].T``), which is the hot op of a
+    speculative *draft* forward over storage-mode weights: every draft
+    decode step projects to the full vocabulary.
+
+    For tensor/channel-granularity :class:`QuantizedTensor` tables the
+    scale factors move to the cheap side of the transpose instead of
+    materializing the dequantized ``[V, D]`` table per step:
+
+      ``x @ (q * s).T  ==  (x * s[0]) @ q.T``      (channel: s is [1, D])
+      ``x @ (q * s).T  ==  s * (x @ q.T)``         (tensor: s is scalar)
+
+    and a row-wise ``eq_scale`` divides the output columns.  Value-wise
+    this matches ``x @ w.dequantize().T`` up to fp reassociation; block
+    granularity (scales tile both axes) falls back to the dequantize path.
+    """
+    if not isinstance(w, QuantizedTensor):
+        return jnp.matmul(x, w.T.astype(x.dtype))
+    if w.ndim == 2 and w.granularity in ("tensor", "channel"):
+        q = w.data.astype(jnp.float32)
+        x32 = x.astype(jnp.float32)
+        if w.granularity == "channel":      # scale [1, D] over columns of w
+            out = jnp.matmul(x32 * w.scale.astype(jnp.float32)[0], q.T)
+        else:                               # scalar scale
+            out = jnp.matmul(x32, q.T) * jnp.float32(w.scale)
+        if w.eq_scale is not None:          # per-row divisor of w
+            out = out / w.eq_scale.astype(jnp.float32)
+        return out.astype(x.dtype)
+    return jnp.matmul(x, w.dequantize().T.astype(x.dtype))
+
+
 def take(embedding, ids):
     """Embedding lookup with optional quantized table.
 

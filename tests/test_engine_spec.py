@@ -1,0 +1,385 @@
+"""Self-speculative decoding tests: greedy token-exactness against the
+non-speculative paged engine across every family (any draft, good or
+terrible), rollback/allocator invariants under randomized stress, the
+acceptance rules as pure functions, sampler distribution correctness
+(temperature / top-k / top-p frequency + lossless rejection-sampling
+unbiasedness), config validation, and the quantized-head matmul."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import QuantConfig, get_arch, reduced
+from repro.data import LanguageSpec, sample_batch
+from repro.engine import (Engine, SamplingParams, blocks_for, greedy_accept,
+                          probs, rejection_accept, sample)
+from repro.models import build_model
+from repro.quantize import quantize
+
+KEY = jax.random.PRNGKey(0)
+
+_BUILT: dict = {}
+
+
+def _setup(arch="glm4-9b", dropless=False):
+    """Model + params (+ a quantized absmax draft tree and a wrong-seed
+    'bad' draft), cached per arch so jit caches stay warm."""
+    key = (arch, dropless)
+    if key not in _BUILT:
+        cfg = reduced(get_arch(arch))
+        if dropless:
+            cfg = dataclasses.replace(cfg,
+                                      capacity_factor=float(cfg.n_experts))
+        model = build_model(cfg)
+        params = model.init(KEY)
+        draft, _ = quantize(params, None,
+                            QuantConfig(method="absmax",
+                                        granularity="channel"),
+                            mode="storage", out_dtype="bfloat16")
+        bad = model.init(jax.random.PRNGKey(99))
+        _BUILT[key] = (cfg, model, params, draft, bad,
+                       LanguageSpec(vocab=cfg.vocab_size))
+    return _BUILT[key]
+
+
+def _prompts(spec, lens, seed=0):
+    return [sample_batch(jax.random.PRNGKey(seed * 1000 + i), spec, 1, L)[0]
+            for i, L in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# Greedy token-exactness: spec == non-spec paged engine, every family
+# ---------------------------------------------------------------------------
+
+def test_spec_token_exact_matrix():
+    """Speculative greedy output must equal the non-speculative paged
+    engine token for token on dense, SWA-ring+MoE, MoE, pure-SSM and
+    hybrid configs (MoE at dropless capacity, as for chunked prefill: the
+    verify chunk routes dropless by construction).  The draft is a real
+    absmax-quantized tree, so rounds mix accepts and rejections; the
+    acceptance rate must be meaningful (> 0) for a draft this close."""
+    cases = [
+        ("glm4-9b", False, [10, 25, 6, 17], 40),
+        ("mixtral-8x22b", True, [9, 21, 9, 14], 34),   # SWA ring + MoE
+        ("deepseek-v3", True, [9, 21, 14], 34),        # MoE, prefix stack
+        ("mamba2-780m", False, [9, 40, 12], 48),       # pure SSM
+        ("jamba-v0.1-52b", True, [9, 40, 12], 48),     # hybrid
+    ]
+    for arch, moe, lens, cache_len in cases:
+        cfg, model, params, draft, _, spec = _setup(arch, dropless=moe)
+        prompts = _prompts(spec, lens)
+        base = Engine(model, params, slots=2, cache_len=cache_len,
+                      k_steps=3, paged=True, block_size=8
+                      ).serve(prompts, gen_tokens=5)
+        seng = Engine(model, params, slots=2, cache_len=cache_len,
+                      k_steps=3, paged=True, block_size=8, n_spec=2,
+                      draft_params=draft, check_invariants=True)
+        outs, stats = seng.serve(prompts, gen_tokens=5, return_stats=True)
+        assert outs == base, arch
+        assert stats["draft_tokens"] > 0
+        assert 0 < stats["draft_accepted"] <= stats["draft_tokens"], arch
+
+
+def test_spec_exact_for_any_draft_even_garbage():
+    """The lossless guarantee is structural: a draft from a completely
+    different seed (≈0% acceptance → a rollback every round) must still
+    reproduce the non-speculative greedy output exactly — the draft only
+    chooses how many verifier-identical tokens emit per round."""
+    cfg, model, params, _, bad, spec = _setup()
+    prompts = _prompts(spec, [10, 13, 6, 9])
+    base = Engine(model, params, slots=2, cache_len=32, k_steps=4,
+                  paged=True, block_size=8).serve(prompts, gen_tokens=6)
+    outs, stats = Engine(model, params, slots=2, cache_len=32, k_steps=4,
+                         paged=True, block_size=8, n_spec=2,
+                         draft_params=bad, check_invariants=True
+                         ).serve(prompts, gen_tokens=6, return_stats=True)
+    assert outs == base
+    # wrong-seed drafts agree with the verifier about nothing
+    assert stats["draft_accepted"] < stats["draft_tokens"] // 4
+
+
+def test_spec_budget_clamp_edges():
+    """A round can accept past the remaining budget; emission is clamped
+    without changing values.  gen=1 never decodes, gen=2 clamps the very
+    first round (n_spec=3 > remaining=1)."""
+    cfg, model, params, draft, _, spec = _setup()
+    prompts = _prompts(spec, [10, 13, 6, 9])
+    for gen in (1, 2, 4):
+        base = Engine(model, params, slots=2, cache_len=32, k_steps=5,
+                      paged=True, block_size=8).serve(prompts,
+                                                      gen_tokens=gen)
+        outs = Engine(model, params, slots=2, cache_len=32, k_steps=5,
+                      paged=True, block_size=8, n_spec=3,
+                      draft_params=draft, check_invariants=True
+                      ).serve(prompts, gen_tokens=gen)
+        assert outs == base, gen
+        assert [len(o) for o in outs] == [gen] * len(prompts)
+
+
+def test_spec_tight_pool_with_reservation_slack():
+    """The reservation ledger counts the speculative span (up to n_spec
+    rows past the budget) into each slot's worst case: a pool sized to
+    exactly that bound serializes but stays exact and never starves."""
+    cfg, model, params, draft, _, spec = _setup()
+    prompts = _prompts(spec, [20, 20, 20, 20])
+    base = Engine(model, params, slots=2, cache_len=32, k_steps=4,
+                  paged=True, block_size=8).serve(prompts, gen_tokens=5)
+    need = blocks_for(20 + 5 - 1 + 2, 8)          # lifetime + n_spec slack
+    tight = Engine(model, params, slots=2, cache_len=32, k_steps=4,
+                   paged=True, block_size=8, num_blocks=need, n_spec=2,
+                   draft_params=draft, check_invariants=True)
+    outs, stats = tight.serve(prompts, gen_tokens=5, return_stats=True)
+    assert outs == base
+    assert stats["prefill_calls"] == 4            # one slot at a time fits
+
+
+def test_spec_sampled_mode_deterministic_and_complete():
+    """Sampled speculative serving is not token-exact vs non-speculative
+    sampling (different PRNG consumption) but must be deterministic under
+    a fixed seed and deliver full budgets of in-vocab tokens."""
+    cfg, model, params, draft, _, spec = _setup()
+    prompts = _prompts(spec, [10, 13, 6])
+    sp = SamplingParams(greedy=False, temperature=0.9, top_k=40, top_p=0.9)
+    eng = Engine(model, params, slots=2, cache_len=32, k_steps=4,
+                 paged=True, block_size=8, n_spec=2, draft_params=draft,
+                 sampling=sp, check_invariants=True)
+    o1 = eng.serve(prompts, gen_tokens=6, seed=7)
+    o2 = eng.serve(prompts, gen_tokens=6, seed=7)
+    assert o1 == o2
+    assert [len(o) for o in o1] == [6, 6, 6]
+    assert all(0 <= t < cfg.vocab_size for o in o1 for t in o)
+
+
+# ---------------------------------------------------------------------------
+# Randomized stress: mixed accept/reject rollbacks + allocator invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_spec_stress_randomized(seed):
+    """Adversarial sweep: random prompt lengths / request counts / budgets
+    / draft depth / pool tightness, alternating a close (quantized) and a
+    hostile (wrong-seed) draft — so rounds mix full accepts, partial
+    rollbacks and full rejections while slots churn and blocks recycle.
+    Output must equal the non-speculative paged engine token for token,
+    with allocator conservation asserted after every dispatch
+    (check_invariants)."""
+    rng = np.random.RandomState(seed)
+    cfg, model, params, draft, bad, spec = _setup()
+    slots = 2
+    n_req = int(rng.randint(slots, slots + 4))
+    lens = [int(rng.randint(4, 29)) for _ in range(n_req)]
+    gen = int(rng.randint(2, 7))
+    k_steps = int(rng.randint(2, 4))
+    n_spec = int(rng.randint(1, k_steps))          # < k_steps
+    cache_len = max(lens) + gen + int(rng.randint(0, 6))
+    dtree = draft if seed % 2 == 0 else bad
+    prompts = _prompts(spec, lens, seed=seed % 997)
+
+    base = Engine(model, params, slots=slots, cache_len=cache_len,
+                  k_steps=k_steps, paged=True, block_size=8
+                  ).serve(prompts, gen_tokens=gen)
+    full = slots * blocks_for(cache_len, 8)
+    lo = max(blocks_for(L + gen - 1 + n_spec, 8) for L in lens)
+    num_blocks = int(rng.randint(lo, full + 1))    # sometimes starved pool
+    outs = Engine(model, params, slots=slots, cache_len=cache_len,
+                  k_steps=k_steps, paged=True, block_size=8,
+                  num_blocks=num_blocks, n_spec=n_spec, draft_params=dtree,
+                  check_invariants=True).serve(prompts, gen_tokens=gen)
+    assert outs == base
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rules as pure functions
+# ---------------------------------------------------------------------------
+
+def test_greedy_accept_prefix_and_correction():
+    p_logits = jnp.asarray([
+        # verifier argmaxes: [2, 0, 3] — drafts [2, 0, 1]: accept 2, fix 3
+        [[0, 1, 9, 2], [9, 1, 0, 2], [0, 1, 2, 9]],
+        # verifier argmaxes: [1, 3, 0] — drafts [2, 3, 0]: reject at 0
+        [[0, 9, 1, 2], [0, 1, 2, 9], [9, 1, 2, 0]],
+    ], jnp.float32)
+    drafts = jnp.asarray([[2, 0, 1], [2, 3, 0]], jnp.int32)
+    out, a = greedy_accept(drafts[:, :2], p_logits)
+    np.testing.assert_array_equal(np.asarray(a), [2, 0])
+    assert out[0, 0] == 2 and out[0, 1] == 0 and out[0, 2] == 3  # bonus row
+    assert out[1, 0] == 1                                       # correction
+
+
+def test_rejection_accept_identical_draft_always_accepts():
+    """q == p accepts every draft (the ratio test is >= 1) and the bonus
+    comes from p_{n+1}."""
+    V = 8
+    k1, k2 = jax.random.split(KEY)
+    p = jax.random.normal(k1, (4, 3, V))
+    drafts = jax.random.categorical(k2, p[:, :2], axis=-1).astype(jnp.int32)
+    sp = SamplingParams(greedy=False, temperature=0.8)
+    out, a = rejection_accept(jax.random.PRNGKey(5), drafts, p[:, :2], p, sp)
+    np.testing.assert_array_equal(np.asarray(a), [2, 2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(out[:, :2]), np.asarray(drafts))
+
+
+def test_rejection_sampling_unbiased_on_toy_vocab():
+    """The emitted first token of a speculative round must be distributed
+    exactly as plain sampling from the warped target — for a draft
+    distribution that disagrees with the target.  Empirical frequencies
+    over a fixed-seed batch of rounds vs the exact warped target probs."""
+    V, N = 6, 8000
+    p_logits = jnp.asarray([[0.5, -0.2, 1.1, 0.0, -1.0, 0.4],
+                            [1.0, 0.0, 0.0, -0.5, 0.3, -0.2],
+                            [0.0, 0.2, -0.3, 0.8, 0.1, -0.9]], jnp.float32)
+    q_logits = jnp.asarray([[1.2, 0.1, -0.5, 0.3, 0.0, -0.2],
+                            [-0.3, 0.9, 0.2, 0.0, -1.0, 0.5]], jnp.float32)
+    sp = SamplingParams(greedy=False, temperature=0.9, top_k=5, top_p=0.95)
+
+    def one_round(key):
+        kd, ka = jax.random.split(key)
+        drafts = sample(q_logits, kd, sp)[None]            # [1, 2] from q
+        out, _ = rejection_accept(ka, drafts, q_logits[None],
+                                  p_logits[None], sp)
+        return out[0, 0]                                   # first emitted
+
+    toks = jax.vmap(one_round)(jax.random.split(jax.random.PRNGKey(42), N))
+    freq = np.bincount(np.asarray(toks), minlength=V) / N
+    want = np.asarray(probs(p_logits[0], sp))
+    np.testing.assert_allclose(freq, want, atol=0.02)
+    # and tokens cut by the warp never appear
+    assert np.all(freq[want == 0] == 0)
+
+
+# ---------------------------------------------------------------------------
+# Sampler distribution correctness (temperature / top-k / top-p)
+# ---------------------------------------------------------------------------
+
+def test_sampler_frequency_matches_warped_distribution():
+    """Fixed-seed frequency test: empirical sampling frequencies track the
+    warped (top-k -> temperature -> top-p) distribution, and masked tokens
+    have exactly zero mass."""
+    V, N = 8, 8000
+    logits = jnp.asarray([2.0, 1.5, 1.2, 0.8, 0.2, -0.5, -1.0, -3.0])
+    cases = [
+        SamplingParams(greedy=False, temperature=0.7),
+        SamplingParams(greedy=False, temperature=1.3, top_k=4),
+        SamplingParams(greedy=False, temperature=1.0, top_p=0.6),
+        SamplingParams(greedy=False, temperature=0.8, top_k=5, top_p=0.8),
+    ]
+    for sp in cases:
+        keys = jax.random.split(jax.random.PRNGKey(123), N)
+        toks = jax.vmap(lambda k: sample(logits, k, sp))(keys)
+        freq = np.bincount(np.asarray(toks), minlength=V) / N
+        want = np.asarray(probs(logits, sp))
+        np.testing.assert_allclose(freq, want, atol=0.02, err_msg=repr(sp))
+        assert np.all(freq[want == 0] == 0), repr(sp)
+
+
+def test_top_p_nucleus_boundary():
+    """top_p keeps the smallest prefix of the sorted distribution whose
+    mass reaches p — the top token always survives, even when its own
+    probability exceeds p."""
+    logits = jnp.log(jnp.asarray([0.5, 0.3, 0.15, 0.05]))
+    p_small = probs(logits, SamplingParams(greedy=False, top_p=0.4))
+    np.testing.assert_allclose(np.asarray(p_small), [1.0, 0, 0, 0],
+                               atol=1e-6)
+    p_mid = probs(logits, SamplingParams(greedy=False, top_p=0.6))
+    assert np.asarray(p_mid)[2] == 0 and np.asarray(p_mid)[3] == 0
+    np.testing.assert_allclose(np.asarray(p_mid)[:2], [0.625, 0.375],
+                               atol=1e-4)
+    # top_p=1 is bitwise the old sampler (no truncation)
+    p_all = probs(logits, SamplingParams(greedy=False))
+    assert np.all(np.asarray(p_all) > 0)
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(greedy=False, top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(greedy=False, top_p=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Config validation (early, friendly)
+# ---------------------------------------------------------------------------
+
+def test_spec_config_validation():
+    cfg, model, params, draft, _, spec = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        Engine(model, params, slots=2, cache_len=32, n_spec=2,
+               draft_params=draft)
+    with pytest.raises(ValueError, match="chunked prefill"):
+        Engine(model, params, slots=2, cache_len=32, paged=True,
+               block_size=8, chunk_size=8, n_spec=2, draft_params=draft)
+    with pytest.raises(ValueError, match="n_spec must be < k_steps"):
+        Engine(model, params, slots=2, cache_len=32, paged=True,
+               block_size=8, k_steps=2, n_spec=2, draft_params=draft)
+    with pytest.raises(ValueError, match="draft_params"):
+        Engine(model, params, slots=2, cache_len=32, paged=True,
+               block_size=8, n_spec=2)
+    with pytest.raises(ValueError, match="draft_params without n_spec"):
+        Engine(model, params, slots=2, cache_len=32, paged=True,
+               block_size=8, draft_params=draft)
+
+
+def test_spec_rejects_capacity_routed_moe():
+    """The verify forward routes MoE dropless; a config whose decode path
+    can drop tokens (capacity_factor * top_k < n_experts) could diverge
+    from the non-speculative engine on an overflowing queue, so the engine
+    refuses it early instead of silently weakening the lossless claim.
+    (Construction fails before params are touched, so stubs suffice.)"""
+    cfg = reduced(get_arch("deepseek-v3"))
+    assert cfg.capacity_factor * cfg.top_k < cfg.n_experts  # droppy default
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="dropless"):
+        Engine(model, {}, slots=2, cache_len=32, paged=True, block_size=8,
+               n_spec=2, draft_params={"stub": True})
+
+
+def test_swa_block_size_validation_is_early():
+    """block_size not dividing the SWA window fails at Engine construction
+    with a friendly message, not as a deep shape error at first serve."""
+    cfg, model, params, _, _, spec = _setup("mixtral-8x22b", dropless=True)
+    with pytest.raises(ValueError, match="must divide the sliding window"):
+        Engine(model, params, slots=2, cache_len=34, paged=True,
+               block_size=6)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-head matmul (the draft's per-step hot op)
+# ---------------------------------------------------------------------------
+
+def test_matmul_t_matches_dequantized_head():
+    """matmul_t (x @ w.T with the scales hoisted around the transpose)
+    matches the dequantize-then-transpose reference for tensor/channel
+    granularities, eq_scale epilogue included; block granularity falls
+    back to the exact dequantize path."""
+    from repro.core.formats import get_format
+    from repro.core.granularity import absmax_scale, quantize_store
+    from repro.quant_runtime import qlinear
+    from repro.quant_runtime.qparams import QuantizedTensor
+
+    fmt = get_format("fp8_e4m3")
+    table = jax.random.normal(KEY, (40, 24), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 24), jnp.bfloat16)
+    for gran, bs in (("tensor", 128), ("channel", 128), ("block", 16)):
+        scale = absmax_scale(table, gran, fmt, bs)
+        q = quantize_store(table, scale, gran, fmt, bs)
+        for eq in (None, jnp.abs(jax.random.normal(
+                jax.random.PRNGKey(1), (40,))) + 0.5):
+            qt = QuantizedTensor(q, scale, fmt="fp8_e4m3", granularity=gran,
+                                 block_size=bs, out_dtype="bfloat16",
+                                 eq_scale=eq)
+            got = qlinear.matmul_t(x, qt)
+            want = jnp.matmul(x, qt.dequantize().T.astype(x.dtype))
+            assert got.shape == want.shape == (2, 3, 40)
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                rtol=0.05, atol=0.05,
+                err_msg=f"{gran} eq={eq is not None}")
+    # dense tables: bitwise the old resolve-transpose path
+    got = qlinear.matmul_t(x, table)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.matmul(x, table.T.astype(x.dtype))))
