@@ -36,7 +36,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_meta
 from repro.configs import get_arch, reduced
 from repro.data import LanguageSpec, sample_batch
 from repro.engine import Engine, blocks_for, serve_host_loop
@@ -246,6 +246,7 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
     result["mixed"]["cache_bytes_ratio"] = (
         result["mixed"]["paged"]["cache_bytes"]
         / max(result["mixed"]["engine"]["cache_bytes"], 1))
+    result["meta"] = run_meta(result["workload"])
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     emit("serve.old_host_loop", old_dt * 1e6,

@@ -28,7 +28,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_meta
 from repro.configs import QuantConfig, get_arch, reduced
 from repro.data import LanguageSpec, sample_batch
 from repro.engine import Engine
@@ -89,7 +89,8 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
         "workload": {"arch": arch, "requests": requests, "batch": batch,
                      "prompt_len": prompt_len, "gen": gen,
                      "k_steps": k_steps, "n_spec": n_spec,
-                     "block_size": block_size},
+                     "block_size": block_size,
+                     "methods": list(methods)},
         "paged": {"tok_per_s": base_stats["tokens"] / base_dt,
                   "wall_s": base_dt, "tokens": base_stats["tokens"],
                   "host_syncs": base_stats["host_syncs"]},
@@ -124,6 +125,7 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
              f"speedup={row['speedup_vs_paged']:.2f}")
     emit("spec.paged_baseline", base_dt * 1e6,
          f"tok_per_s={result['paged']['tok_per_s']:.1f}")
+    result["meta"] = run_meta(result["workload"])
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     return result

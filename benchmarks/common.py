@@ -1,9 +1,47 @@
-"""Benchmark utilities: timed jit calls, CSV emission."""
+"""Benchmark utilities: timed jit calls, CSV emission, provenance stamps."""
 from __future__ import annotations
 
+import hashlib
+import json
+import subprocess
 import time
+from pathlib import Path
 
 import jax
+
+
+def run_meta(workload: dict | None = None) -> dict:
+    """Provenance stamp for benchmark artifacts: commit SHA (suffixed
+    ``-dirty`` when the tree has uncommitted changes), jax version and
+    backend, and a fingerprint of the workload config — so two BENCH
+    files are comparable (or provably not) at a glance."""
+    here = Path(__file__).resolve().parent
+    sha = "unknown"
+    try:
+        r = subprocess.run(["git", "rev-parse", "--short=12", "HEAD"],
+                           capture_output=True, text=True, cwd=here,
+                           timeout=10)
+        if r.returncode == 0 and r.stdout.strip():
+            sha = r.stdout.strip()
+            d = subprocess.run(["git", "status", "--porcelain"],
+                               capture_output=True, text=True, cwd=here,
+                               timeout=10)
+            if d.returncode == 0 and d.stdout.strip():
+                sha += "-dirty"
+    except (OSError, subprocess.SubprocessError):
+        pass
+    meta = {
+        "commit": sha,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+    if workload is not None:
+        blob = json.dumps(workload, sort_keys=True, default=str)
+        meta["config_fingerprint"] = hashlib.sha256(
+            blob.encode()).hexdigest()[:16]
+    return meta
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:

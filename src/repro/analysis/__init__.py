@@ -1,6 +1,8 @@
-from repro.analysis.hlo import collective_bytes, dominant_ops
+from repro.analysis.hlo import (HloModule, collective_bytes, dominant_ops,
+                                parse_input_output_aliases)
 from repro.analysis.roofline import (Roofline, model_flops_estimate,
                                      roofline_from_costs)
 
-__all__ = ["collective_bytes", "dominant_ops", "Roofline",
+__all__ = ["HloModule", "collective_bytes", "dominant_ops",
+           "parse_input_output_aliases", "Roofline",
            "model_flops_estimate", "roofline_from_costs"]

@@ -44,6 +44,18 @@ SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
                   "bitcast", "while", "conditional", "call", "after-all",
                   "add-dependency", "partition-id", "replica-id"}
 
+# Ops that cross the host boundary inside compiled code.  ``custom-call``
+# is host-crossing only for callback targets (python callbacks registered
+# by jax.debug.*, io_callback, pure_callback); plain custom-calls (e.g.
+# cuDNN/oneDNN library kernels) stay on device.
+HOST_OPS = {"infeed", "outfeed", "send", "recv", "send-done", "recv-done"}
+_HOST_CALL_TARGET = re.compile(r"callback|host", re.IGNORECASE)
+_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}\s*:\s*\(\s*(\d+)\s*,\s*\{([\d,\s]*)\}\s*"
+    r"(?:,\s*([\w-]+)\s*)?\)")
+
 
 def _shape_elems(dt: str, dims: str) -> int:
     n = 1
@@ -60,6 +72,47 @@ def _type_bytes(type_str: str) -> int:
         if dt in DTYPE_BYTES:
             total += _shape_elems(dt, dims) * DTYPE_BYTES[dt]
     return total
+
+
+def _balanced_braces(text: str, start: int) -> str:
+    """The ``{...}`` segment (braces included) opening at ``start``."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    return text[start:]
+
+
+def parse_input_output_aliases(text: str) -> list[dict]:
+    """Donation aliases from the compiled module header.
+
+    Compiled (post-buffer-assignment) HLO text carries
+    ``input_output_alias={ {out_idx}: (param, {param_idx}, kind), ... }``
+    on the ``HloModule`` line — the pairs XLA actually aliased.  A donated
+    operand that is *absent* here was copied, not reused: the donation
+    silently failed and the buffer is paid for twice.  Returns dicts with
+    ``output_index`` / ``param_number`` / ``param_index`` / ``kind``.
+    """
+    key = "input_output_alias="
+    pos = text.find(key)
+    if pos < 0:
+        return []
+    seg = _balanced_braces(text, pos + len(key))
+    out = []
+    for m in _ALIAS_ENTRY_RE.finditer(seg):
+        out.append({
+            "output_index": tuple(int(x) for x in m.group(1).split(",")
+                                  if x.strip()),
+            "param_number": int(m.group(2)),
+            "param_index": tuple(int(x) for x in m.group(3).split(",")
+                                 if x.strip()),
+            "kind": m.group(4) or "may-alias",
+        })
+    return out
 
 
 class Instr:
@@ -101,6 +154,47 @@ class HloModule:
         self.shapes: dict[str, str] = {}   # instr name -> type string
         self._parse(text)
         self.mult_flops, self.mult_bytes = self._multipliers()
+        self.aliases = parse_input_output_aliases(text)
+
+    # -- compile-contract views -------------------------------------------
+
+    def aliased_param_numbers(self) -> set[int]:
+        """Entry parameter numbers that alias an output (donation landed)."""
+        return {a["param_number"] for a in self.aliases}
+
+    def entry_params(self) -> dict[int, str]:
+        """``parameter(N)`` instructions of the entry computation:
+        param number -> type string (local, post-partition shapes)."""
+        entry = self.entry or (next(iter(self.computations))
+                               if self.computations else None)
+        out: dict[int, str] = {}
+        for ins in self.computations.get(entry, []):
+            if ins.op != "parameter":
+                continue
+            head = ins.rest.split(")", 1)[0].strip()
+            if head.isdigit():
+                out[int(head)] = ins.type_str
+        return out
+
+    def param_bytes(self, param_number: int) -> int:
+        return _type_bytes(self.entry_params().get(param_number, ""))
+
+    def host_ops(self) -> list[tuple[str, str, str]]:
+        """Host-boundary crossings anywhere in the module: ``(computation,
+        op, custom_call_target-or-'')`` for infeed/outfeed/send/recv and
+        python-callback custom-calls.  Any hit inside a decode dispatch
+        means a per-step host sync the K-step scan was built to avoid."""
+        hits = []
+        for comp, instrs in self.computations.items():
+            for ins in instrs:
+                if ins.op in HOST_OPS:
+                    hits.append((comp, ins.op, ""))
+                elif ins.op == "custom-call":
+                    tm = _TARGET_RE.search(ins.rest)
+                    target = tm.group(1) if tm else ""
+                    if _HOST_CALL_TARGET.search(target):
+                        hits.append((comp, ins.op, target))
+        return hits
 
     def _parse(self, text: str) -> None:
         cur: list[Instr] | None = None

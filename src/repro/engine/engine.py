@@ -221,41 +221,103 @@ class Engine:
             self._hold_blocks: set[int] = set()   # index + pending holds
             self._pcache = None                   # persistent cache/state
             self._pstate = None
-        self._dispatch = jax.jit(
+        # Every jitted entry point goes through _register so the compile
+        # contracts (repro.staticcheck) and the serve telemetry see one
+        # authoritative registry: name -> jitted fn, donated argnums, and
+        # where the cache tree sits in the signature / result.
+        self._entries: dict[str, dict] = {}
+        self._dispatch = self._register(
+            "_dispatch",
             make_decode_dispatch(model, sp, K, paged=cfg.paged,
                                  cow=cfg.prefix_cache),
-            donate_argnums=(1, 2))
+            donate=(1, 2), cache_arg=2, cache_out=1)
         if cfg.n_spec:
             self._draft_params = (self._place_params(draft_params)
                                   if mesh is not None else draft_params)
-            self._dispatch_spec = jax.jit(
+            self._dispatch_spec = self._register(
+                "_dispatch_spec",
                 make_decode_dispatch(model, sp, K, paged=True,
                                      n_spec=cfg.n_spec),
-                donate_argnums=(2, 3))
+                donate=(2, 3), cache_arg=3, cache_out=1)
         if cfg.chunk_size:
-            self._dispatch_chunk = jax.jit(
+            self._dispatch_chunk = self._register(
+                "_dispatch_chunk",
                 make_decode_dispatch(model, sp, K, paged=True,
                                      cow=cfg.prefix_cache,
                                      chunk=cfg.chunk_size),
-                donate_argnums=(1, 2))
-            self._admit_chunk = jax.jit(self._admit_chunk_impl,
-                                        donate_argnums=(0, 1))
-            self._evict = jax.jit(self._evict_impl, donate_argnums=(0,))
-        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0, 1))
-        self._scatter_paged = jax.jit(self._scatter_paged_impl,
-                                      donate_argnums=(0, 1))
+                donate=(1, 2), cache_arg=2, cache_out=1)
+            self._admit_chunk = self._register(
+                "_admit_chunk", self._admit_chunk_impl, donate=(0, 1),
+                cache_arg=0, cache_out=0)
+            self._evict = self._register(
+                "_evict", self._evict_impl, donate=(0,),
+                cache_arg=0, cache_out=0)
+        self._scatter = self._register(
+            "_scatter", self._scatter_impl, donate=(0, 1),
+            cache_arg=0, cache_out=0)
+        self._scatter_paged = self._register(
+            "_scatter_paged", self._scatter_paged_impl, donate=(0, 1),
+            cache_arg=0, cache_out=0)
         # paged prefill sizes the part cache to the admitted group (block-
         # aligned prompt rows), so admission cost tracks prompt length; the
         # contiguous path always materializes cache_len rows.
-        self._prefill_full = jax.jit(
+        # Donation is intentionally impossible here: the only large operand
+        # is ``params``, which must survive every future dispatch/prefill
+        # call, and the part cache is *produced*, not consumed — there is
+        # no dead input buffer for the output to alias.
+        self._prefill_full = self._register(
+            "_prefill_full",
             lambda p, toks, cl: model.prefill(p, {"tokens": toks},
                                               cache_len=cl),
             static_argnums=(2,))
-        self._prefill_padded = jax.jit(
+        self._prefill_padded = self._register(
+            "_prefill_padded",
             lambda p, toks, lens, cl: model.prefill(p, {"tokens": toks},
                                                     cache_len=cl,
                                                     lengths=lens),
             static_argnums=(3,))
+
+    # -- jitted entry-point registry ----------------------------------------
+
+    def _register(self, name: str, fun, *, donate: tuple = (),
+                  static_argnums: tuple = (), cache_arg: int | None = None,
+                  cache_out: int | None = None):
+        """Jit ``fun`` and record it as a named engine entry point.
+
+        ``donate`` are the argnums handed to ``donate_argnums`` (the
+        compile contracts assert each donated cache/pool buffer actually
+        aliases an output); ``cache_arg``/``cache_out`` locate the cache
+        tree in the signature and the result tuple so dtype-hygiene checks
+        can compare leaf dtypes input -> output."""
+        jitted = jax.jit(fun, donate_argnums=donate,
+                         static_argnums=static_argnums)
+        self._entries[name] = {
+            "fn": jitted, "fun": fun, "donate": tuple(donate),
+            "static_argnums": tuple(static_argnums),
+            "cache_arg": cache_arg, "cache_out": cache_out,
+        }
+        return jitted
+
+    def entry_points(self) -> dict[str, dict]:
+        """The live jitted entry points of this engine configuration (a
+        shallow copy: name -> registry record).  repro.staticcheck lowers
+        every record across the config matrix and checks its compile
+        contracts; the serve CLI reads compile counts off the same set."""
+        return dict(self._entries)
+
+    def compile_counts(self) -> dict[str, int]:
+        """Traced-signature count per entry point (jit cache size).  A
+        steady-state serve loop holds this at 1 per entry; growth across
+        dispatches means an avoidable recompile (shape drift or weak-type
+        literals in the argument tree)."""
+        out = {}
+        for name, e in self._entries.items():
+            fn = e["fn"]
+            try:
+                out[name] = int(fn._cache_size())
+            except Exception:  # jax without the AOT cache-size probe
+                out[name] = -1
+        return out
 
     # -- sharded placement --------------------------------------------------
 

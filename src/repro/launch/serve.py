@@ -256,6 +256,15 @@ def main() -> None:
           f"{stats['dispatches']} dispatches of {args.k_steps} steps, "
           f"{stats['prefill_calls']} prefill calls; {kind} cache, "
           f"{stats['cache_bytes']} cache bytes{extra})")
+    # jit cache size per entry point: dispatch/scatter entries hold at 1 in
+    # steady state; the prefill entries compile once per distinct prompt-
+    # length bucket.  Anything above that is an avoidable recompile — the
+    # signature contracts live in `python -m repro.staticcheck`.
+    counts = eng.compile_counts()
+    total = sum(c for c in counts.values() if c > 0)
+    print(f"compiles: {total} total ("
+          + ", ".join(f"{k.lstrip('_')}={v}"
+                      for k, v in sorted(counts.items())) + ")")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o}")
 

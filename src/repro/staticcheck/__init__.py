@@ -1,0 +1,11 @@
+"""Static analysis for the serving engine: compile contracts over every
+jitted entry point (donation aliasing, host-sync bans, recompile
+fingerprints, dtype hygiene, collective manifests) plus an AST lint for
+the host/device discipline jit cannot enforce.  Run with
+``python -m repro.staticcheck``; ratcheted by ``staticcheck_baseline.json``
+and ``staticcheck_manifest.json`` at the repo root."""
+from repro.staticcheck.report import (Report, Violation, diff_baseline,
+                                      load_baseline, write_baseline)
+
+__all__ = ["Report", "Violation", "diff_baseline", "load_baseline",
+           "write_baseline"]

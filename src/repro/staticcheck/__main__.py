@@ -1,0 +1,140 @@
+"""``python -m repro.staticcheck`` — run both passes and ratchet.
+
+Exit status 0 iff every violation is either fixed or explicitly waived in
+the checked-in baseline.  ``--update`` rewrites the baseline (waiving the
+current violations) and the fingerprint manifest; review the diff like
+code — the ratchet only goes down.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def _force_two_devices() -> None:
+    """Mesh contracts need >= 2 devices; the CPU platform fakes them, but
+    only if the flag lands before jax initializes."""
+    if "jax" in sys.modules:  # pragma: no cover - CLI imports us first
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=2").strip()
+
+
+def repo_root(start: Path | None = None) -> Path:
+    """Nearest ancestor holding the ``src/repro`` tree."""
+    p = (start or Path(__file__).resolve()).parent
+    while p != p.parent:
+        if (p / "src" / "repro").is_dir():
+            return p
+        p = p.parent
+    return Path.cwd()
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.staticcheck",
+        description="compile contracts + AST lint for the serving engine")
+    ap.add_argument("--matrix", choices=("quick", "full", "none"),
+                    default="quick",
+                    help="config matrix for the compile contracts "
+                         "(none = lint only)")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="alias for --matrix none")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline and fingerprint manifest "
+                         "to match the current tree")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write the full JSON report here")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline path (default: "
+                         "<repo>/staticcheck_baseline.json)")
+    ap.add_argument("--manifest", type=Path, default=None,
+                    help="fingerprint manifest path (default: "
+                         "<repo>/staticcheck_manifest.json)")
+    args = ap.parse_args(argv)
+
+    _force_two_devices()
+
+    from repro.staticcheck.contracts import run_contracts
+    from repro.staticcheck.lint import lint_tree
+    from repro.staticcheck.report import (Report, diff_baseline,
+                                          load_baseline, write_baseline)
+
+    root = repo_root()
+    baseline_path = args.baseline or root / "staticcheck_baseline.json"
+    manifest_path = args.manifest or root / "staticcheck_manifest.json"
+    matrix = "none" if args.lint_only else args.matrix
+
+    report = Report()
+
+    lint_vs, n_files = lint_tree(root / "src" / "repro")
+    report.extend(lint_vs)
+    report.checked["lint_files"] = n_files
+
+    manifest: dict = {}
+    new_manifest: dict = {}
+    if matrix != "none":
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f).get("cases", {})
+        except FileNotFoundError:
+            manifest = {}
+        contract_vs, new_manifest, counters, skipped = run_contracts(
+            matrix, manifest, args.update)
+        report.extend(contract_vs)
+        report.checked.update(counters)
+        report.skipped = skipped
+
+    baseline = load_baseline(baseline_path)
+    new, waived, stale = diff_baseline(report.violations, baseline)
+
+    if args.report:
+        out = report.to_json()
+        out["new"] = [v.row() for v in new]
+        out["stale_waivers"] = stale
+        with open(args.report, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    if args.update:
+        write_baseline(baseline_path, report.violations)
+        if matrix != "none":
+            with open(manifest_path, "w") as f:
+                json.dump({"version": 1, "cases": new_manifest}, f,
+                          indent=2, sort_keys=True)
+                f.write("\n")
+        print(f"baseline rewritten: {len(report.violations)} waiver(s) -> "
+              f"{baseline_path.name}"
+              + (f"; manifest: {manifest_path.name}"
+                 if matrix != "none" else ""))
+        return 0
+
+    checked = ", ".join(f"{k}={v}" for k, v in sorted(
+        report.checked.items()))
+    print(f"staticcheck: {checked}")
+    for s in report.skipped:
+        print(f"  skipped {s}")
+    for v in waived:
+        print(f"  waived  {v.key}")
+    for k in stale:
+        print(f"  stale waiver (fixed? drop via --update): {k}")
+    for v in new:
+        loc = f"{v.where}:{v.line}" if v.line else v.where
+        print(f"  FAIL [{v.rule}] {loc} ({v.symbol}): {v.msg}")
+    wasted = sum(v.bytes_wasted for v in new)
+    if wasted:
+        print(f"  donation bytes wasted: {wasted}")
+    if new:
+        print(f"{len(new)} new violation(s) not in {baseline_path.name}")
+        return 1
+    print("clean" + (f" ({len(waived)} waived)" if waived else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,232 @@
+"""AST lint: repo-specific hazards jit hides until they cost 100x.
+
+Three rules, all scoped to where they are actually bugs:
+
+* ``host-sync`` — ``jax.device_get`` / ``.item()`` / ``np.asarray`` inside
+  *traced* code: the engine's scan-body modules (scheduler/spec/paged/
+  sampler), the model stack, and the ``*_impl`` jitted bodies in
+  ``engine/engine.py``.  One of these inside the K-step scan reintroduces
+  the per-token host round-trip the dispatch exists to remove.  Host-side
+  admission/drain code is exempt by construction (it is not in the traced
+  set); a traced function that legitimately crosses the boundary can carry
+  ``# staticcheck: host-boundary`` on its ``def`` line.
+* ``list-asarray`` — ``jnp.asarray([...])`` / ``jnp.array([...])`` of a
+  Python list/tuple literal in traced code: the literal re-materializes
+  (and, element-wise weak-typed, re-*traces*) per call.
+* ``undonated-jit`` — a ``jax.jit`` call (or ``partial(jax.jit, ...)``
+  decorator) whose wrapped callable takes a cache/pool-shaped argument
+  (``cache``/``state``/``bstate``/``pool``/``part_cache``) without
+  ``donate_argnums``: the cache buffer is silently duplicated at every
+  call (2x cache memory).  Applies repo-wide.
+
+Suppression: ``# staticcheck: ok[rule]`` (or bare ``# staticcheck: ok``)
+on the flagged line waives it in place — prefer this over a baseline
+entry when the code is *correct*, so the reason lives next to the code.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from repro.staticcheck.report import Violation
+
+# Modules whose entire body is traced (runs under jit/scan).  engine.py is
+# mixed host/device: only its ``*_impl`` functions are traced there.
+TRACED_FILES = (
+    "engine/scheduler.py",
+    "engine/spec.py",
+    "engine/paged.py",
+    "engine/sampler.py",
+    "quant_runtime/qlinear.py",
+)
+TRACED_DIRS = ("models/",)
+MIXED_FILES = ("engine/engine.py",)
+
+CACHE_PARAMS = {"cache", "state", "bstate", "pool", "part_cache"}
+
+_OK_RE = re.compile(r"#\s*staticcheck:\s*ok(?:\[([\w,\s-]*)\])?")
+_HOST_RE = re.compile(r"#\s*staticcheck:\s*host-boundary")
+
+
+def _is_traced_file(rel: str) -> bool:
+    return rel in TRACED_FILES or any(rel.startswith(d)
+                                      for d in TRACED_DIRS)
+
+
+def _pragma_ok(lines: list[str], lineno: int, rule: str) -> bool:
+    if not (1 <= lineno <= len(lines)):
+        return False
+    m = _OK_RE.search(lines[lineno - 1])
+    if not m:
+        return False
+    rules = m.group(1)
+    return rules is None or rule in {r.strip() for r in rules.split(",")}
+
+
+def _call_name(node: ast.AST) -> str:
+    """Dotted name of a call target: ``jax.device_get`` -> that string."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _jit_wrapped_params(call: ast.Call, module: ast.Module) -> set[str]:
+    """Parameter names of the callable handed to a ``jax.jit(...)`` call."""
+    if not call.args:
+        return set()
+    fn = call.args[0]
+    if isinstance(fn, ast.Lambda):
+        return {a.arg for a in fn.args.args}
+    name = None
+    if isinstance(fn, ast.Name):
+        name = fn.id
+    elif isinstance(fn, ast.Attribute):   # self._admit_chunk_impl etc.
+        name = fn.attr
+    if name is None:
+        return set()
+    for node in ast.walk(module):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return {a.arg for a in node.args.args} - {"self", "cls"}
+    return set()
+
+
+def _has_donate(call: ast.Call) -> bool:
+    return any(kw.arg in ("donate_argnums", "donate_argnames")
+               for kw in call.keywords)
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str, lines: list[str], module: ast.Module):
+        self.rel = rel
+        self.lines = lines
+        self.module = module
+        self.violations: list[Violation] = []
+        self._func_stack: list[tuple[str, bool]] = []  # (name, host_ok)
+        self.traced_file = _is_traced_file(rel)
+        self.mixed_file = rel in MIXED_FILES
+
+    # -- scope helpers ----------------------------------------------------
+
+    def _in_traced_code(self) -> bool:
+        if any(host for _, host in self._func_stack):
+            return False
+        if self.traced_file:
+            return True
+        if self.mixed_file:
+            return any(name.endswith("_impl")
+                       for name, _ in self._func_stack)
+        return False
+
+    def _fname(self) -> str:
+        return self._func_stack[-1][0] if self._func_stack else "<module>"
+
+    def _emit(self, rule: str, node: ast.AST, symbol: str, msg: str):
+        if _pragma_ok(self.lines, node.lineno, rule):
+            return
+        self.violations.append(Violation(
+            kind="lint", rule=rule, where=self.rel, symbol=symbol,
+            msg=msg, line=node.lineno))
+
+    # -- visitors ---------------------------------------------------------
+
+    def visit_FunctionDef(self, node):
+        host = bool(_HOST_RE.search(self.lines[node.lineno - 1])) \
+            if node.lineno <= len(self.lines) else False
+        self._func_stack.append((node.name, host))
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node):
+        name = _call_name(node.func)
+        if self._in_traced_code():
+            if name in ("jax.device_get", "np.asarray", "numpy.asarray",
+                        "onp.asarray"):
+                self._emit("host-sync", node, self._fname(),
+                           f"{name}() in traced code forces a device->host "
+                           f"sync every call (inside the K-step scan: one "
+                           f"per token)")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "item" and not node.args):
+                self._emit("host-sync", node, self._fname(),
+                           ".item() in traced code forces a device->host "
+                           "sync every call")
+            if name in ("jnp.asarray", "jnp.array", "jax.numpy.asarray",
+                        "jax.numpy.array") and node.args \
+                    and isinstance(node.args[0], (ast.List, ast.Tuple)):
+                self._emit("list-asarray", node, self._fname(),
+                           f"{name}() of a Python list literal in traced "
+                           f"code re-materializes a constant per call "
+                           f"(and weak-typed literals re-trace)")
+        if name == "jax.jit" and not _has_donate(node):
+            params = _jit_wrapped_params(node, self.module)
+            hit = sorted(params & CACHE_PARAMS)
+            if hit:
+                self._emit("undonated-jit", node, self._fname(),
+                           f"jax.jit of a callable taking {hit} without "
+                           f"donate_argnums: the cache/pool buffer is "
+                           f"copied, not reused (2x memory per call)")
+        self.generic_visit(node)
+
+    def visit_FunctionDef_decorators(self, node):  # pragma: no cover
+        pass
+
+
+def _lint_decorated_jits(tree: ast.Module, rel: str, lines: list[str],
+                         out: list[Violation]) -> None:
+    """``@partial(jax.jit, ...)``-decorated defs with cache-shaped params
+    and no donation."""
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            if not (isinstance(dec, ast.Call)
+                    and _call_name(dec.func) == "partial"
+                    and dec.args
+                    and _call_name(dec.args[0]) == "jax.jit"):
+                continue
+            if _has_donate(dec):
+                continue
+            params = {a.arg for a in node.args.args} - {"self", "cls"}
+            hit = sorted(params & CACHE_PARAMS)
+            if hit and not _pragma_ok(lines, dec.lineno, "undonated-jit") \
+                    and not _pragma_ok(lines, node.lineno, "undonated-jit"):
+                out.append(Violation(
+                    kind="lint", rule="undonated-jit", where=rel,
+                    symbol=node.name, line=node.lineno,
+                    msg=f"partial(jax.jit)-decorated {node.name} takes "
+                        f"{hit} without donate_argnums"))
+
+
+def lint_file(path: Path, rel: str) -> list[Violation]:
+    src = path.read_text()
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Violation(kind="lint", rule="syntax", where=rel,
+                          symbol="<module>", line=e.lineno or 0,
+                          msg=f"unparseable: {e.msg}")]
+    linter = _Linter(rel, lines, tree)
+    linter.visit(tree)
+    _lint_decorated_jits(tree, rel, lines, linter.violations)
+    return linter.violations
+
+
+def lint_tree(root: str | Path) -> tuple[list[Violation], int]:
+    """Lint every ``.py`` under ``root``; returns (violations, n_files)."""
+    root = Path(root)
+    violations: list[Violation] = []
+    n = 0
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        n += 1
+        violations.extend(lint_file(path, rel))
+    return violations, n

@@ -1,0 +1,94 @@
+"""Violation records, JSON reports, and the baseline ratchet.
+
+A violation's identity is its ``key`` — ``kind:rule:where:symbol`` — which
+deliberately excludes line numbers and prose so unrelated edits don't churn
+the baseline.  The checked-in baseline (``staticcheck_baseline.json``)
+lists the *waived* keys with their full records for review; a run fails
+when it produces any violation whose key is not waived.  The ratchet only
+goes down: waivers that no longer fire are reported as stale (drop them
+with ``--update``), and new violations never pass silently.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+
+BASELINE_VERSION = 1
+
+
+@dataclass(frozen=True)
+class Violation:
+    kind: str              # "lint" | "contract"
+    rule: str              # e.g. "host-sync", "donation-not-landed"
+    where: str             # file path (lint) or "case/entry" (contract)
+    symbol: str            # enclosing function / contract anchor
+    msg: str
+    line: int = 0          # advisory only — not part of the identity key
+    bytes_wasted: int = 0  # donation contract: buffer paid for twice
+
+    @property
+    def key(self) -> str:
+        return f"{self.kind}:{self.rule}:{self.where}:{self.symbol}"
+
+    def row(self) -> dict:
+        d = asdict(self)
+        d["key"] = self.key
+        return d
+
+
+@dataclass
+class Report:
+    violations: list[Violation] = field(default_factory=list)
+    checked: dict = field(default_factory=dict)   # counters per pass
+    skipped: list[str] = field(default_factory=list)
+
+    def extend(self, vs) -> None:
+        self.violations.extend(vs)
+
+    def to_json(self) -> dict:
+        return {
+            "version": BASELINE_VERSION,
+            "checked": self.checked,
+            "skipped": self.skipped,
+            "violations": [v.row() for v in self.violations],
+            "bytes_wasted": sum(v.bytes_wasted for v in self.violations),
+        }
+
+
+def load_baseline(path) -> dict:
+    """``{key: waiver-record}`` from a baseline file; {} when absent."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"baseline {path}: unsupported version "
+                         f"{data.get('version')!r}")
+    return {w["key"]: w for w in data.get("waivers", [])}
+
+
+def write_baseline(path, violations: list[Violation]) -> None:
+    """Rewrite the baseline to waive exactly the current violations."""
+    data = {
+        "version": BASELINE_VERSION,
+        "comment": "Explicit waivers for repro.staticcheck — every entry "
+                   "is a known, reviewed violation.  The ratchet only "
+                   "goes down: remove entries as they are fixed, never "
+                   "add one without a reason in its record.",
+        "waivers": sorted((v.row() for v in violations),
+                          key=lambda r: r["key"]),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def diff_baseline(violations: list[Violation], baseline: dict):
+    """(new, waived, stale): violations not in the baseline, violations
+    covered by it, and waiver keys that no longer fire."""
+    seen = {v.key for v in violations}
+    new = [v for v in violations if v.key not in baseline]
+    waived = [v for v in violations if v.key in baseline]
+    stale = sorted(k for k in baseline if k not in seen)
+    return new, waived, stale

@@ -1,0 +1,45 @@
+"""Seeded-violation fixture for the staticcheck self-test.
+
+This file deliberately contains every lint hazard; it lives under a
+fixture tree whose layout mirrors ``src/repro`` so the path-scoped rules
+fire (this relative path is a traced module).  tests/test_staticcheck.py
+asserts the checker FAILS on this tree — if a rule regresses to silence,
+that test catches it.
+"""
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+
+def step_body(state, cache, x):
+    lens = jax.device_get(cache["lengths"])          # host-sync
+    k = state["cur"].item()                          # host-sync
+    mask = jnp.asarray([1, 0, 1, 0])                 # list-asarray
+    return lens, k, mask
+
+
+def allowed_body(state):
+    k = state["cur"].item()  # staticcheck: ok[host-sync]
+    return k
+
+
+def drain(cache):  # staticcheck: host-boundary
+    return jax.device_get(cache["lengths"])
+
+
+def _cache_update(cache, x):
+    return {**cache, "x": x}
+
+
+undonated = jax.jit(_cache_update)                   # undonated-jit
+donated = jax.jit(_cache_update, donate_argnums=(0,))
+
+
+@partial(jax.jit)
+def decorated_update(cache, x):                      # undonated-jit
+    return {**cache, "x": x}
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def decorated_ok(cache, x):
+    return {**cache, "x": x}

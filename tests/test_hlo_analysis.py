@@ -74,3 +74,62 @@ def test_collectives_parsed():
     if len(jax.devices()) < 2:
         import pytest
         pytest.skip("single device")
+
+
+# -- input_output_alias + host-op parsing (repro.staticcheck substrate) ------
+
+def test_alias_header_parsed_from_text():
+    from repro.analysis.hlo import parse_input_output_aliases
+    txt = ('HloModule m, input_output_alias={ {0}: (1, {}, may-alias), '
+           '{1, 2}: (0, {3}, must-alias) }\n\n'
+           'ENTRY %main (a: f32[4], b: f32[4]) -> (f32[4], f32[4]) {\n'
+           '  ROOT %t = (f32[4], f32[4]) tuple(%a, %b)\n}\n')
+    aliases = parse_input_output_aliases(txt)
+    assert aliases == [
+        {"output_index": (0,), "param_number": 1, "param_index": (),
+         "kind": "may-alias"},
+        {"output_index": (1, 2), "param_number": 0, "param_index": (3,),
+         "kind": "must-alias"},
+    ]
+    assert HloModule(txt).aliased_param_numbers() == {0, 1}
+
+
+def test_alias_absent_when_no_donation():
+    txt = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile().as_text()
+    mod = HloModule(txt)
+    assert mod.aliased_param_numbers() == set()
+    assert mod.entry_params() == {0: "f32[16,16]{1,0}", 1: "f32[16,16]{1,0}"}
+    assert mod.param_bytes(0) == 16 * 16 * 4
+
+
+def test_alias_of_compiled_donation():
+    fn = jax.jit(lambda c, x: c.at[0].set(x), donate_argnums=(0,))
+    txt = fn.lower(jax.ShapeDtypeStruct((32, 32), jnp.float32),
+                   jax.ShapeDtypeStruct((32,), jnp.float32)) \
+        .compile().as_text()
+    assert 0 in HloModule(txt).aliased_param_numbers()
+
+
+def test_host_ops_detects_callback_and_clean_module():
+    def f(x):
+        jax.debug.print("s={}", jnp.sum(x))
+        return x + 1
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text()
+    hits = HloModule(txt).host_ops()
+    assert hits and any("callback" in t for _, _, t in hits)
+
+    clean = jax.jit(lambda x: x + 1).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text()
+    assert HloModule(clean).host_ops() == []
+
+
+def test_host_ops_detects_infeed_ops_in_text():
+    txt = ('HloModule m\n\n'
+           'ENTRY %main (a: f32[4]) -> f32[4] {\n'
+           '  %tok = token[] after-all()\n'
+           '  %i = (f32[4], token[]) infeed(%tok)\n'
+           '  ROOT %g = f32[4] get-tuple-element(%i), index=0\n}\n')
+    assert [op for _, op, _ in HloModule(txt).host_ops()] == ["infeed"]

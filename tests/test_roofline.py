@@ -1,0 +1,104 @@
+"""Pin the roofline arithmetic (analysis/roofline.py): term math,
+dominant-term selection, MFU, and the 6*N*D model-FLOPs estimate."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     model_flops_estimate,
+                                     roofline_from_costs)
+
+
+def test_terms_normalize_to_one_second():
+    r = roofline_from_costs(PEAK_FLOPS, HBM_BW, ICI_BW,
+                            model_flops=PEAK_FLOPS, n_chips=1)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(1.0)
+    assert r.collective_s == pytest.approx(1.0)
+    assert r.step_time_s == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("flops,bytes_,coll,want", [
+    (2 * PEAK_FLOPS, HBM_BW, ICI_BW, "compute"),
+    (PEAK_FLOPS, 3 * HBM_BW, ICI_BW, "memory"),
+    (PEAK_FLOPS, HBM_BW, 5 * ICI_BW, "collective"),
+])
+def test_dominant_term(flops, bytes_, coll, want):
+    r = roofline_from_costs(flops, bytes_, coll, model_flops=1.0, n_chips=1)
+    assert r.dominant == want
+    assert r.step_time_s == pytest.approx(
+        max(r.compute_s, r.memory_s, r.collective_s))
+
+
+def test_mfu_and_useful_fraction():
+    # 2 chips, each compiled at exactly half peak for 1s; the model math
+    # accounts for half the compiled FLOPs
+    flops_per_chip = PEAK_FLOPS / 2
+    model = flops_per_chip  # = half of the 2-chip compiled total
+    r = roofline_from_costs(flops_per_chip, 0.0, 0.0, model_flops=model,
+                            n_chips=2)
+    assert r.useful_flops_frac == pytest.approx(0.5)
+    # bound step time = 0.5s; mfu = (peak/2) / (0.5s * 2 chips * peak)
+    assert r.mfu == pytest.approx(0.5)
+
+
+def test_mfu_zero_guards():
+    r = roofline_from_costs(0.0, 0.0, 0.0, model_flops=0.0, n_chips=1)
+    assert r.mfu == 0.0
+    assert r.useful_flops_frac == 0.0
+
+
+def test_row_is_json_shaped():
+    r = roofline_from_costs(PEAK_FLOPS, HBM_BW, 0.0, model_flops=1e9,
+                            n_chips=4)
+    row = r.row()
+    assert row["dominant"] in ("compute", "memory", "collective")
+    for k in ("compute_s", "memory_s", "collective_s", "model_flops",
+              "hlo_flops_per_chip", "useful_flops_frac", "mfu_bound"):
+        assert k in row
+
+
+# -- model_flops_estimate ---------------------------------------------------
+
+def _tree(dense=1000, moe=0, embed=500):
+    t = {"embed": {"w": np.zeros((embed,))},
+         "stack": {"l0": {"attn": {"wq": np.zeros((dense,))}}}}
+    if moe:
+        t["stack"]["l0"]["moe"] = {"experts": np.zeros((moe,)),
+                                   "router": {"w": np.zeros((7,))}}
+    return t
+
+
+def test_model_flops_dense_modes():
+    cfg = SimpleNamespace(n_experts=0, top_k=0)
+    shape = SimpleNamespace(global_batch=4, seq_len=16)
+    tree = _tree(dense=1000)
+    # embedding excluded; N = 1000
+    assert model_flops_estimate(cfg, tree, shape, mode="train") \
+        == pytest.approx(6.0 * 1000 * 4 * 16)
+    assert model_flops_estimate(cfg, tree, shape, mode="prefill") \
+        == pytest.approx(2.0 * 1000 * 4 * 16)
+    assert model_flops_estimate(cfg, tree, shape, mode="decode") \
+        == pytest.approx(2.0 * 1000 * 4)
+
+
+def test_model_flops_moe_active_fraction():
+    cfg = SimpleNamespace(n_experts=8, top_k=2)
+    shape = SimpleNamespace(global_batch=1, seq_len=1)
+    tree = _tree(dense=1000, moe=800)
+    # router (7 params) counts as dense/active; expert params scale by
+    # top_k / n_experts
+    active = (1000 + 7) + 800 * 2 / 8
+    assert model_flops_estimate(cfg, tree, shape, mode="decode") \
+        == pytest.approx(2.0 * active)
+
+
+def test_model_flops_head_and_embed_excluded():
+    cfg = SimpleNamespace(n_experts=0, top_k=0)
+    shape = SimpleNamespace(global_batch=1, seq_len=1)
+    tree = _tree(dense=1000)
+    tree["w_head"] = np.zeros((12345,))
+    base = model_flops_estimate(cfg, _tree(dense=1000), shape, mode="decode")
+    assert model_flops_estimate(cfg, tree, shape, mode="decode") \
+        == pytest.approx(base)

@@ -1,0 +1,184 @@
+"""Self-test for repro.staticcheck: the seeded-violation fixture must make
+the checker fail, the clean tree must pass, the baseline ratchet must only
+go down, and the compile contracts must catch planted hazards."""
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.staticcheck.contracts import (check_entry, signature_fingerprint,
+                                         weak_type_leaves)
+from repro.staticcheck.lint import lint_file, lint_tree
+from repro.staticcheck.report import (Violation, diff_baseline,
+                                      load_baseline, write_baseline)
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURE = Path(__file__).resolve().parent / "fixtures" / "staticcheck_bad"
+
+
+# -- lint pass: seeded fixture must fail ------------------------------------
+
+def test_fixture_seeds_every_lint_rule():
+    vs, n_files = lint_tree(FIXTURE)
+    assert n_files == 1
+    rules = sorted(v.rule for v in vs)
+    # step_body: 2 host syncs + 1 list literal; undonated jit call +
+    # undonated decorated def
+    assert rules == ["host-sync", "host-sync", "list-asarray",
+                     "undonated-jit", "undonated-jit"]
+    # and the checker would fail: against an empty baseline all are new
+    new, waived, stale = diff_baseline(vs, {})
+    assert len(new) == len(vs) and not waived and not stale
+
+
+def test_fixture_pragmas_suppress():
+    vs = lint_file(FIXTURE / "engine" / "scheduler.py",
+                   "engine/scheduler.py")
+    symbols = {(v.rule, v.symbol) for v in vs}
+    # the ok[host-sync] pragma and the host-boundary decorator comment
+    # keep allowed_body/drain out; the donated variants never fire
+    assert ("host-sync", "allowed_body") not in symbols
+    assert ("host-sync", "drain") not in symbols
+    assert ("undonated-jit", "decorated_ok") not in symbols
+    assert ("undonated-jit", "decorated_update") in symbols
+
+
+def test_fixture_outside_traced_scope_only_flags_jit():
+    # the same source under a host-side path: host-sync/list-asarray are
+    # fine there, the undonated jits are hazards anywhere
+    vs = lint_file(FIXTURE / "engine" / "scheduler.py", "launch/serve.py")
+    assert sorted(v.rule for v in vs) == ["undonated-jit", "undonated-jit"]
+
+
+def test_real_tree_is_clean():
+    vs, n_files = lint_tree(REPO / "src" / "repro")
+    assert n_files > 50
+    assert vs == [], [v.key for v in vs]
+
+
+# -- baseline ratchet -------------------------------------------------------
+
+def test_baseline_roundtrip_and_ratchet(tmp_path):
+    a = Violation(kind="lint", rule="host-sync", where="engine/x.py",
+                  symbol="f", msg="m", line=3)
+    b = Violation(kind="contract", rule="donation-not-landed",
+                  where="case/_dispatch", symbol="arg[2]/k", msg="m",
+                  bytes_wasted=4096)
+    path = tmp_path / "baseline.json"
+    write_baseline(path, [a])
+    waivers = load_baseline(path)
+    assert set(waivers) == {a.key}
+
+    # waived violation passes; a new one fails; fixing `a` leaves a stale
+    # waiver (ratchet surface to drop via --update)
+    new, waived, stale = diff_baseline([a, b], waivers)
+    assert [v.key for v in new] == [b.key]
+    assert [v.key for v in waived] == [a.key]
+    new, waived, stale = diff_baseline([], waivers)
+    assert not new and not waived and stale == [a.key]
+
+
+def test_baseline_missing_and_bad_version(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == {}
+    (tmp_path / "bad.json").write_text('{"version": 99, "waivers": []}')
+    with pytest.raises(ValueError):
+        load_baseline(tmp_path / "bad.json")
+
+
+def test_checked_in_baseline_has_no_engine_waivers():
+    """PR acceptance: no waiver may hide a host-sync or donation violation
+    in a decode dispatch."""
+    waivers = load_baseline(REPO / "staticcheck_baseline.json")
+    for key in waivers:
+        assert not (("host" in key or "donation" in key)
+                    and "_dispatch" in key), key
+
+
+# -- compile contracts on planted hazards -----------------------------------
+
+def _rec(fn, donate=(), statics=()):
+    return {"fn": jax.jit(fn, donate_argnums=donate,
+                          static_argnums=statics),
+            "donate": donate, "static_argnums": statics,
+            "cache_arg": None, "cache_out": None}
+
+
+def _check(rec, args, **kw):
+    kw.setdefault("expect", None)
+    kw.setdefault("update", True)
+    return check_entry("self", "entry", rec, args, **kw)
+
+
+def test_contract_catches_unlanded_donation():
+    # the donated (64,64) buffer cannot alias the scalar output
+    cache = jnp.zeros((64, 64))
+    res = _check(_rec(lambda cache, x: jnp.sum(cache) + x, donate=(0,)),
+                 (cache, jnp.float32(1.0)))
+    rules = [v.rule for v in res.violations]
+    assert rules == ["donation-not-landed"]
+    assert res.violations[0].bytes_wasted == 64 * 64 * 4
+
+
+def test_contract_accepts_landed_donation():
+    cache = jnp.zeros((64, 64))
+    res = _check(_rec(lambda cache, x: cache.at[0, 0].set(x), donate=(0,)),
+                 (cache, jnp.float32(1.0)))
+    assert res.violations == []
+
+
+def test_contract_catches_host_callback():
+    def f(x):
+        jax.debug.print("x={}", jnp.sum(x))
+        return x * 2
+    res = _check(_rec(f), (jnp.zeros((8, 8)),))
+    assert [v.rule for v in res.violations] == ["host-boundary"]
+
+
+def test_contract_catches_weak_type_and_fingerprints_drift():
+    f = lambda x, y: x + y
+    args_weak = (jnp.zeros((4,)), 1.0)       # python float: weak leaf
+    assert weak_type_leaves(args_weak, ()) == ["arg[1]/"]
+    res = _check(_rec(f), args_weak)
+    assert "weak-type-signature" in [v.rule for v in res.violations]
+
+    args = (jnp.zeros((4,)), jnp.float32(1.0))
+    fp = signature_fingerprint(args, ())
+    assert fp == signature_fingerprint(args, ())          # deterministic
+    assert fp != signature_fingerprint((jnp.zeros((5,)),
+                                        jnp.float32(1.0)), ())
+    res = _check(_rec(f), args, expect={"fingerprint": "0" * 16},
+                 update=False)
+    assert [v.rule for v in res.violations] == ["recompile-fingerprint"]
+    res = _check(_rec(f), args, expect={"fingerprint": fp}, update=False)
+    assert res.violations == []
+
+
+def test_contract_missing_manifest_entry_fails_unless_update():
+    f = lambda x: x * 2
+    args = (jnp.zeros((4,)),)
+    res = _check(_rec(f), args, expect=None, update=False)
+    assert [v.rule for v in res.violations] == ["fingerprint-missing"]
+    res = _check(_rec(f), args, expect=None, update=True)
+    assert res.violations == []
+
+
+def test_contract_catches_cache_dtype_drift():
+    def f(cache, x):
+        return {"k": cache["k"].astype(jnp.float32) + x}  # bf16 -> f32
+    rec = _rec(f, donate=(0,))
+    rec["cache_arg"], rec["cache_out"] = 0, 0
+    cache = {"k": jnp.zeros((64, 64), jnp.bfloat16)}
+    res = _check(rec, (cache, jnp.float32(1.0)),
+                 cache_in=cache)
+    assert "cache-dtype-drift" in [v.rule for v in res.violations]
+
+
+def test_contract_clean_on_dtype_stable_cache():
+    def f(cache, x):
+        return {"k": (cache["k"] + x).astype(cache["k"].dtype)}
+    rec = _rec(f, donate=(0,))
+    rec["cache_arg"], rec["cache_out"] = 0, 0
+    cache = {"k": jnp.zeros((64, 64), jnp.bfloat16)}
+    res = _check(rec, (cache, jnp.bfloat16(1.0)), cache_in=cache)
+    assert res.violations == []
