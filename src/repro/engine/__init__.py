@@ -28,14 +28,15 @@ from repro.engine.prefix import PrefixIndex, chain_hashes
 from repro.engine.sampler import SamplingParams, probs, sample, warp_logits
 from repro.engine.scheduler import (init_slot_state, make_decode_dispatch,
                                     make_decode_step)
-from repro.engine.spec import (greedy_accept, make_spec_dispatch,
-                               rejection_accept)
+from repro.engine.spec import (DepthController, greedy_accept,
+                               make_spec_dispatch, rejection_accept)
 
 __all__ = [
     "Engine", "EngineConfig", "SamplingParams", "sample", "probs",
     "warp_logits",
     "init_slot_state", "make_decode_dispatch", "make_decode_step",
     "make_spec_dispatch", "greedy_accept", "rejection_accept",
+    "DepthController",
     "serve_host_loop", "single_slot_prefill",
     "admit_slot", "alloc_admit", "alloc_span", "alloc_step", "blocks_for",
     "gather_blocks", "init_block_state", "release_refs", "release_slots",

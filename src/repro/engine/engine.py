@@ -57,13 +57,22 @@ no extra syncs); everything per-token lives on device:
 
 * **self-speculative decoding** — ``n_spec > 0`` (paged only; pass a
   quantized ``draft_params`` tree) swaps each dispatch step for a
-  speculative round: the quantized tree drafts ``n_spec`` tokens, one
-  full-precision multi-token verify forward accepts a prefix (greedy
+  speculative round: the quantized tree drafts up to ``n_spec`` tokens,
+  one full-precision multi-token verify forward accepts a prefix (greedy
   match, or lossless rejection sampling for temperature/top-k/top-p), and
-  rejected positions roll back per slot (engine/spec.py).  Greedy outputs
-  stay token-exact vs the non-speculative engine; the draft acceptance
-  rate (stats ``draft_accepted / draft_tokens``) doubles as a data-free
-  behavioral-fidelity metric for the quantization method.
+  rejected positions roll back per slot (engine/spec.py).  Speculation
+  **composes** with chunked prefill and prefix caching: chunk pieces, CoW
+  prefix writes and speculative rounds are orthogonal phases of one scan
+  step sharing a spec-aware span allocation (a draft write into a shared
+  prompt block CoWs exactly like a decode write), so shared-prefix
+  workloads can measure draft fidelity too.  The speculation depth is
+  dynamic by default (``spec_dynamic``): a host-side AIMD controller
+  walks it 1..n_spec from the acceptance telemetry — the depth is a
+  traced operand, so moves never recompile.  Greedy outputs stay
+  token-exact vs the non-speculative engine for any draft and any depth
+  trajectory; the draft acceptance rate (stats ``draft_accepted /
+  draft_tokens``) doubles as a data-free behavioral-fidelity metric for
+  the quantization method.
 
 Right-padded prefill is only exact when a row's hidden states cannot depend
 on positions after it or on other tokens' presence: pure causal attention
@@ -105,11 +114,19 @@ class EngineConfig:
                             # (paged only; tokens per in-scan prefill piece)
     prefix_cache: bool = False  # refcounted prompt-block sharing (paged;
                                 # implies chunked prefill)
-    n_spec: int = 0         # >0: self-speculative decoding — draft n_spec
-                            # tokens per round with the quantized
+    n_spec: int = 0         # >0: self-speculative decoding — draft up to
+                            # n_spec tokens per round with the quantized
                             # ``draft_params`` tree, verify with one
                             # full-precision forward (paged only; pass
-                            # draft_params= to Engine)
+                            # draft_params= to Engine).  Composes with
+                            # chunk_size and prefix_cache: speculation,
+                            # chunked prefill and CoW prefix writes are
+                            # orthogonal phases of one dispatch scan step
+    spec_dynamic: bool = True   # move the speculation depth 1..n_spec at
+                                # runtime from acceptance telemetry
+                                # (spec.DepthController); depth is a traced
+                                # operand, so moves never recompile.
+                                # False pins depth = n_spec
     check_invariants: bool = False  # assert allocator conservation after
                                     # every admission/dispatch (tests; slow)
 
@@ -152,11 +169,6 @@ class Engine:
                 raise ValueError(
                     "speculative decoding (n_spec > 0) rides the paged "
                     "engine: pass paged=True")
-            if cfg.chunk_size or cfg.prefix_cache:
-                raise ValueError(
-                    "speculative decoding does not compose with chunked "
-                    "prefill / prefix caching yet: drop chunk_size / "
-                    "prefix_cache, or n_spec")
             if cfg.n_spec >= K:
                 raise ValueError(
                     f"n_spec must be < k_steps (got n_spec={cfg.n_spec}, "
@@ -237,6 +249,7 @@ class Engine:
             self._dispatch_spec = self._register(
                 "_dispatch_spec",
                 make_decode_dispatch(model, sp, K, paged=True,
+                                     cow=cfg.prefix_cache,
                                      n_spec=cfg.n_spec),
                 donate=(2, 3), cache_arg=3, cache_out=1)
         if cfg.chunk_size:
@@ -246,6 +259,14 @@ class Engine:
                                      cow=cfg.prefix_cache,
                                      chunk=cfg.chunk_size),
                 donate=(1, 2), cache_arg=2, cache_out=1)
+            if cfg.n_spec:
+                self._dispatch_spec_chunk = self._register(
+                    "_dispatch_spec_chunk",
+                    make_decode_dispatch(model, sp, K, paged=True,
+                                         cow=cfg.prefix_cache,
+                                         chunk=cfg.chunk_size,
+                                         n_spec=cfg.n_spec),
+                    donate=(2, 3), cache_arg=3, cache_out=1)
             self._admit_chunk = self._register(
                 "_admit_chunk", self._admit_chunk_impl, donate=(0, 1),
                 cache_arg=0, cache_out=0)
@@ -576,6 +597,16 @@ class Engine:
 
     # -- serve --------------------------------------------------------------
 
+    def _spec_controller(self):
+        """Fresh dynamic-depth policy for one serve() call (spec.py).  With
+        ``spec_dynamic=False`` the thresholds are pushed out of [0, 1], so
+        no acceptance rate ever moves the depth off ``n_spec`` — one code
+        path either way."""
+        from repro.engine.spec import DepthController
+        if self.cfg.spec_dynamic:
+            return DepthController(self.cfg.n_spec)
+        return DepthController(self.cfg.n_spec, lo=-1.0, hi=2.0)
+
     def _blocks_needed(self, prompt_len: int, gen_tokens: int) -> int:
         """Worst-case pool blocks one request can ever hold: SWA rings page
         the whole window; dense requests write ``prompt + gen - 1`` cache
@@ -598,13 +629,15 @@ class Engine:
         requests = [jnp.asarray(r, jnp.int32).reshape(-1) for r in requests]
         stats = {"host_syncs": 0, "dispatches": 0, "prefill_calls": 0,
                  "decode_steps": 0, "tokens": 0, "prefill_tokens": 0}
+        spec_ctl = self._spec_controller() if cfg.n_spec else None
         if cfg.n_spec:
-            stats.update(spec_rounds=0, draft_tokens=0, draft_accepted=0)
+            stats.update(spec_rounds=0, draft_tokens=0, draft_accepted=0,
+                         spec_depth=spec_ctl.depth)
         if gen_tokens < 1 or not requests:
             return ([], stats) if return_stats else []
         if cfg.chunk_size:
             return self._serve_chunked(requests, gen_tokens, seed,
-                                       return_stats, stats)
+                                       return_stats, stats, spec_ctl)
         outputs: dict[int, list[int]] = {}
 
         if cfg.paged:
@@ -681,11 +714,13 @@ class Engine:
             key, sub = jax.random.split(key)
             if cfg.n_spec:
                 state, cache, toks, emitted, counts = self._dispatch_spec(
-                    self.params, self._draft_params, state, cache, sub)
+                    self.params, self._draft_params, state, cache,
+                    jnp.int32(spec_ctl.depth), sub)
                 toks_h, em_h, c = jax.device_get((toks, emitted, counts))
                 stats["draft_tokens"] += int(c[0])
                 stats["draft_accepted"] += int(c[1])
                 stats["spec_rounds"] += K
+                stats["spec_depth"] = spec_ctl.update(int(c[0]), int(c[1]))
             else:
                 state, cache, toks, emitted = self._dispatch(
                     self.params, state, cache, sub)
@@ -713,7 +748,7 @@ class Engine:
     # -- chunked / prefix-cached serve loop ---------------------------------
 
     def _serve_chunked(self, requests, gen_tokens, seed, return_stats,
-                       stats):
+                       stats, spec_ctl=None):
         cfg, model = self.cfg, self.model
         B, K, C = cfg.slots, cfg.k_steps, cfg.chunk_size
         bs = cfg.block_size
@@ -817,8 +852,13 @@ class Engine:
                         shared = matched_ids + ([partial_id] if partial_hit
                                                 else [])
                         n_ret = new_full if self._can_match else 0
+                        # speculative rounds overshoot the budget by up to
+                        # n_spec rows before rolling back (the last
+                        # round's span), so the lifetime worst case covers
+                        # that transient too — mirrors _blocks_needed
                         lifetime = min(
-                            P.blocks_for(min(L + gen_tokens - 1, cap_rows),
+                            P.blocks_for(min(L + gen_tokens - 1
+                                             + cfg.n_spec, cap_rows),
                                          bs),
                             self._mb)
                         decode_alloc = lifetime - P.blocks_for(L, bs)
@@ -871,11 +911,24 @@ class Engine:
                 continue
 
             key, sub = jax.random.split(key)
-            dispatch = (self._dispatch_chunk if any(p > 0 for p in slot_pf)
-                        else self._dispatch)
-            state, cache, toks, emitted = dispatch(
-                self.params, state, cache, sub)
-            toks_h, em_h = jax.device_get((toks, emitted))
+            prefilling = any(p > 0 for p in slot_pf)
+            if cfg.n_spec:
+                dispatch = (self._dispatch_spec_chunk if prefilling
+                            else self._dispatch_spec)
+                state, cache, toks, emitted, counts = dispatch(
+                    self.params, self._draft_params, state, cache,
+                    jnp.int32(spec_ctl.depth), sub)
+                toks_h, em_h, c = jax.device_get((toks, emitted, counts))
+                stats["draft_tokens"] += int(c[0])
+                stats["draft_accepted"] += int(c[1])
+                stats["spec_rounds"] += K
+                stats["spec_depth"] = spec_ctl.update(int(c[0]), int(c[1]))
+            else:
+                dispatch = (self._dispatch_chunk if prefilling
+                            else self._dispatch)
+                state, cache, toks, emitted = dispatch(
+                    self.params, state, cache, sub)
+                toks_h, em_h = jax.device_get((toks, emitted))
             stats["host_syncs"] += 1
             stats["dispatches"] += 1
             stats["decode_steps"] += K

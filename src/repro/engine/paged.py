@@ -264,7 +264,7 @@ def admit_slot(bstate: dict, slot, shared_ids: jnp.ndarray, n_shared,
 
 
 def alloc_span(bstate: dict, lengths: jnp.ndarray, width: int,
-               block_size: int, cap: int, ring: bool) -> dict:
+               block_size: int, cap: int, ring: bool, cow: bool = False):
     """Ensure each active slot's table covers rows ``[lengths[b],
     lengths[b] + width)`` — the speculative round's write span (engine/
     spec.py): the draft writes up to ``width - 1`` rows past the slot's
@@ -272,22 +272,45 @@ def alloc_span(bstate: dict, lengths: jnp.ndarray, width: int,
     per round here and every write inside the round (draft ``alloc_step``
     calls included) then finds its entry allocated and pops nothing.
 
+    With ``cow=True`` (prefix caching composed with speculation) the span's
+    *first* entry — the block holding row ``lengths[b]`` — may be a
+    partially-filled prompt block shared through the prefix cache
+    (``ref > 1``).  Only that entry can ever be shared: later span entries
+    cover rows past the slot's length, and shared blocks only enter a table
+    at admission, covering prompt rows ``< lengths``.  A shared first entry
+    gets the same treatment ``alloc_step`` gives a shared decode target:
+    pop a private block, rewire the table, drop one reference on the
+    source, and report the pair so the round copies the block's rows
+    *before* any draft/verify write lands (models/lm.py
+    ``cow_copy_blocks``).
+
     Rows at or beyond ``cap`` need no block (their writes trash-route, and
     the engine only emits tokens whose positions fit).  Ring (SWA) tables
-    are fully allocated at admission, so the ring case is a no-op.  Pool
-    exhaustion leaves entries unallocated (writes then trash-route); the
-    engine's reservation ledger counts the speculative span into each
-    slot's worst case, so that path is unreachable in normal operation.
-    Blocks stay in the slot's table after a rejection rolls the length
-    back — the slot grows into them, and ``release_slots`` returns them
-    when it drains.
+    are fully allocated at admission, so the ring case pops and copies
+    nothing.  Pool exhaustion leaves entries unallocated (writes then
+    trash-route); the engine's reservation ledger counts the speculative
+    span — and one CoW spare per partial prefix hit — into each slot's
+    worst case, so that path is unreachable in normal operation.  Blocks
+    stay in the slot's table after a rejection rolls the length back — the
+    slot grows into them, and ``release_slots`` returns them when it
+    drains.
+
+    Returns ``(bstate, cow_src [B], cow_dst [B], blocked [B])``:
+    ``cow_src != cow_dst`` marks a slot whose first span block must be
+    copied ``src -> dst`` (both are the trash index when nothing CoWed);
+    ``blocked`` marks slots whose shared first block could NOT be copied
+    (pool dry) — their table still points at the shared block, so the
+    caller must mask them out of the round entirely rather than let a
+    draft/verify write corrupt rows other owners read.
     """
+    B = bstate["tbl"].shape[0]
+    trash = bstate["free"].shape[0]
+    no_copy = jnp.full((B,), trash, jnp.int32)
     if ring:
-        return bstate
+        return bstate, no_copy, no_copy, jnp.zeros((B,), bool)
     tbl, free, n_free = bstate["tbl"], bstate["free"], bstate["n_free"]
     ref = bstate["ref"]
-    B, MB = tbl.shape
-    trash = free.shape[0]
+    MB = tbl.shape[1]
     nbl = width // block_size + 2            # static: span-straddle bound
     jj = jnp.arange(nbl)[None, :]            # [1, nbl]
     j = lengths[:, None] // block_size + jj  # candidate table entries
@@ -295,7 +318,13 @@ def alloc_span(bstate: dict, lengths: jnp.ndarray, width: int,
     in_span = (j * block_size < jnp.minimum(lengths[:, None] + width, cap)) \
         & (j < MB)
     cur = jnp.take_along_axis(tbl, jc, axis=1)
-    need = bstate["slot_active"][:, None] & in_span & (cur < 0)
+    if cow:
+        shared = (bstate["slot_active"][:, None] & in_span & (jj == 0)
+                  & (cur >= 0)
+                  & (ref[jnp.clip(cur, 0, trash - 1)] > 1))
+    else:
+        shared = jnp.zeros((B, nbl), bool)
+    need = bstate["slot_active"][:, None] & in_span & ((cur < 0) | shared)
     k = jnp.cumsum(need.reshape(-1).astype(jnp.int32)).reshape(B, nbl)
     ok = need & (k <= n_free)
     ids = free[jnp.clip(n_free - k, 0, trash - 1)]
@@ -306,8 +335,16 @@ def alloc_span(bstate: dict, lengths: jnp.ndarray, width: int,
     tbl = tbl.at[jnp.arange(B)[:, None], j].set(
         jnp.where(in_span, new_rows, cur), mode="drop")
     ref = ref.at[jnp.where(ok, ids, trash)].set(1, mode="drop")
+    # a successful CoW pop releases one reference on the shared source;
+    # ref stays >= 1 there (the prefix index / other sharers still hold it)
+    dec = shared & ok
+    ref = ref.at[jnp.where(dec, cur, trash)].add(-1, mode="drop")
     n_free = n_free - jnp.sum(ok.astype(jnp.int32))
-    return {**bstate, "tbl": tbl, "ref": ref, "n_free": n_free}
+    cow_src = jnp.where(dec[:, 0], cur[:, 0], no_copy)
+    cow_dst = jnp.where(dec[:, 0], new_rows[:, 0], no_copy)
+    blocked = shared[:, 0] & ~ok[:, 0]
+    return ({**bstate, "tbl": tbl, "ref": ref, "n_free": n_free},
+            cow_src, cow_dst, blocked)
 
 
 # ---------------------------------------------------------------------------

@@ -22,8 +22,11 @@ block frees once no live slot references it.
 * a **partial tail hit**: when the remaining tail (< one block) equals the
   first ``len(tail)`` tokens of some registered child of the last matched
   chain node, that block is mapped too — the admitted slot then owns a
-  *shared partially-relevant block* and its first decode write triggers the
-  allocator's copy-on-write path.
+  *shared partially-relevant block* and its first write triggers the
+  allocator's copy-on-write path: ``alloc_step`` for a plain decode
+  write, ``alloc_span(cow=True)`` when the slot speculates (the
+  speculative round's whole write span CoWs up front, before any draft
+  write lands — see ``engine/spec.py``).
 
 The engine tracks which live slots reference each entry (``pin``/``unpin``)
 so eviction never pulls a block out from under a running request.

@@ -83,6 +83,47 @@ def _keep_rows(new_cache: dict, old_cache: dict, keep) -> dict:
     return merged
 
 
+def chunk_prefill_substep(model: Model, sp: SamplingParams, chunk: int,
+                          params, st: dict, cache: dict, first_key):
+    """One in-scan chunked-prefill piece — the prefill *phase* of a scan
+    step, shared by the plain decode dispatch and the speculative dispatch
+    (engine/spec.py).
+
+    Runs a ``chunk``-token prefill piece for every slot still in prefill
+    phase (``pf_pos < pf_len``), restores the rows of slots in other phases
+    (``_keep_rows``), samples the first token of slots whose last chunk
+    just landed (from ``first_key``), arms them for decode, and releases
+    the blocks of zero-budget slots.  Returns ``(st, cache, first [B],
+    completed [B])`` — the caller merges ``first`` into its own token grid
+    (the plain dispatch's ``[B, K]`` column, the speculative dispatch's
+    round column 0, which the just-completed slot — inactive during the
+    round — left free).
+    """
+    pcap = st["prompt"].shape[1]
+    pf_left = st["pf_len"] - st["pf_pos"]
+    valid = jnp.clip(pf_left, 0, chunk)
+    prefilling = valid > 0
+    idx = jnp.clip(st["pf_pos"][:, None] + jnp.arange(chunk)[None],
+                   0, pcap - 1)
+    toks = jnp.take_along_axis(st["prompt"], idx, axis=1)
+    logits_pf, new_cache = model.prefill_chunk_paged(
+        params, toks, cache, st["pf_pos"], valid, st["pf_shared"])
+    cache = _keep_rows(new_cache, cache, prefilling)
+    completed = prefilling & (pf_left <= chunk)
+    first = sample(logits_pf, first_key, sp)
+    go = completed & (st["budget"] > 0)
+    cache = {**cache, "slot_active": cache["slot_active"] | go}
+    bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
+                           completed & ~go)
+    cache = {**cache, **bstate}
+    st = {**st,
+          "cur": jnp.where(completed[:, None], first[:, None], st["cur"]),
+          "active": st["active"] | go,
+          "remaining": jnp.where(completed, st["budget"], st["remaining"]),
+          "pf_pos": st["pf_pos"] + valid}
+    return st, cache, first, completed
+
+
 def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
                          *, paged: bool = False, cow: bool = False,
                          chunk: int = 0, n_spec: int = 0):
@@ -96,10 +137,16 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
     ``n_spec > 0`` swaps each scan step for a **speculative round** (draft
     ``n_spec`` tokens with a quantized tree, verify with one full-precision
     forward — engine/spec.py): the returned dispatch then takes an extra
-    ``draft_params`` argument after ``params`` and its grids widen to
-    ``[B, k_steps * (n_spec + 1)]``, plus a trailing ``(drafted, accepted)``
-    counter pair.  Speculation requires the paged cache and does not
-    compose with in-scan chunked prefill or copy-on-write sharing.
+    ``draft_params`` argument after ``params`` and a runtime ``depth``
+    scalar before ``key`` (the dynamic speculation depth, 1..n_spec — a
+    plain traced operand, so moving it never recompiles), and its grids
+    widen to ``[B, k_steps * (n_spec + 1)]``, plus a trailing ``(drafted,
+    accepted)`` counter pair.  Speculation requires the paged cache and
+    **composes** with both flags: ``cow=True`` makes the round's span
+    allocation copy-on-write (a draft/verify write into a prefix-shared
+    block pops a private copy first, exactly like a decode write), and
+    ``chunk > 0`` appends the chunked-prefill phase to every round — the
+    three are orthogonal phases of one scan step.
 
     With ``paged=True`` the cache is the paged block pool
     (``model.init_paged_cache``): each step runs ``decode_step_paged`` (which
@@ -112,12 +159,12 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
     so the same state pytree serves both dispatch flavors.
     """
     if n_spec:
-        if not paged or chunk or cow:
+        if not paged:
             raise NotImplementedError(
-                "speculative dispatch needs the plain paged cache path "
-                "(no chunked prefill / copy-on-write)")
+                "speculative dispatch needs the paged cache path")
         from repro.engine.spec import make_spec_dispatch
-        return make_spec_dispatch(model, sp, k_steps, n_spec)
+        return make_spec_dispatch(model, sp, k_steps, n_spec, cow=cow,
+                                  chunk=chunk)
     if not paged:
         step_fn = model.decode_step
     else:
@@ -130,7 +177,6 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
         if not paged or model.prefill_chunk_paged is None:
             raise NotImplementedError(
                 "chunked prefill needs the paged cache path")
-        pf_fn = model.prefill_chunk_paged
 
     def dispatch(params, state: dict, cache: dict, key):
         def body(carry, step_key):
@@ -153,33 +199,12 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
                   "remaining": remaining}
             # ---- chunked-prefill sub-step -------------------------------
             if chunk:
-                pcap = st["prompt"].shape[1]
-                pf_left = st["pf_len"] - st["pf_pos"]
-                valid = jnp.clip(pf_left, 0, chunk)
-                prefilling = valid > 0
-                idx = jnp.clip(st["pf_pos"][:, None] + jnp.arange(chunk)[None],
-                               0, pcap - 1)
-                toks = jnp.take_along_axis(st["prompt"], idx, axis=1)
-                logits_pf, new_cache = pf_fn(params, toks, cache,
-                                             st["pf_pos"], valid,
-                                             st["pf_shared"])
-                cache = _keep_rows(new_cache, cache, prefilling)
-                completed = prefilling & (pf_left <= chunk)
-                first = sample(logits_pf, jax.random.fold_in(step_key, 1), sp)
-                go = completed & (st["budget"] > 0)
-                cache = {**cache,
-                         "slot_active": cache["slot_active"] | go}
-                bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
-                                       completed & ~go)
-                cache = {**cache, **bstate}
+                st, cache, first, completed = chunk_prefill_substep(
+                    model, sp, chunk, params, st, cache,
+                    jax.random.fold_in(step_key, 1))
                 tok_out = jnp.where(completed, first, tok_out)
                 em_out = em_out | completed
-                st = {**st,
-                      "cur": tok_out[:, None],
-                      "active": st["active"] | go,
-                      "remaining": jnp.where(completed, st["budget"],
-                                             st["remaining"]),
-                      "pf_pos": st["pf_pos"] + valid}
+                st = {**st, "cur": tok_out[:, None]}
             return (st, cache), (tok_out, em_out)
 
         keys = jax.random.split(key, k_steps)

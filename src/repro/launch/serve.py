@@ -21,11 +21,16 @@ only parses flags, builds (and optionally quantizes) the model, and calls
   leaves inherit the dense weight's layout.
 * **Speculative decoding** — ``--spec-draft METHOD --n-spec N`` (with
   ``--paged``) quantizes the weights with METHOD and serves them as the
-  *draft* model: N drafted tokens per round, verified by one forward of
-  the full-precision weights (engine/spec.py).  Greedy output is
-  token-exact vs non-speculative serving; the summary line reports the
-  draft acceptance rate — a data-free behavioral-fidelity readout of the
-  quantization method.
+  *draft* model: up to N drafted tokens per round, verified by one forward
+  of the full-precision weights (engine/spec.py).  Composes freely with
+  ``--prefix-cache`` / ``--chunk-size`` — speculative rounds, CoW prefix
+  writes and chunk-prefill pieces are phases of one dispatch — so
+  shared-prefix workloads measure draft fidelity too.  The round depth is
+  dynamic by default (AIMD on the acceptance rate, 1..N, zero recompiles;
+  ``--spec-static`` pins it at N).  Greedy output is token-exact vs
+  non-speculative serving; the summary line reports the draft acceptance
+  rate — a data-free behavioral-fidelity readout of the quantization
+  method.
 
 Usage (CPU-scale):
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
@@ -140,8 +145,12 @@ def main() -> None:
                          "verified by the full-precision weights (requires "
                          "--paged)")
     ap.add_argument("--n-spec", type=int, default=4,
-                    help="drafted tokens per speculative round (with "
-                         "--spec-draft; must be < --k-steps)")
+                    help="maximum drafted tokens per speculative round "
+                         "(with --spec-draft; must be < --k-steps)")
+    ap.add_argument("--spec-static", action="store_true",
+                    help="pin the speculation depth at --n-spec instead of "
+                         "moving it 1..n-spec from acceptance telemetry "
+                         "(engine/spec.DepthController)")
     ap.add_argument("--daq", action="store_true",
                     help="serve fp8-quantized weights (repro.quantize)")
     ap.add_argument("--metric", default="sign")
@@ -228,6 +237,7 @@ def main() -> None:
                  num_blocks=args.num_blocks, chunk_size=args.chunk_size,
                  prefix_cache=args.prefix_cache,
                  n_spec=args.n_spec if args.spec_draft else 0,
+                 spec_dynamic=not args.spec_static,
                  draft_params=draft_params)
 
     t0 = time.time()
@@ -249,7 +259,8 @@ def main() -> None:
                if stats["draft_tokens"] else 0.0)
         extra += (f", draft acceptance {acc:.1%} "
                   f"({stats['draft_accepted']}/{stats['draft_tokens']} over "
-                  f"{stats['spec_rounds']} rounds of {args.n_spec})")
+                  f"{stats['spec_rounds']} rounds of <={args.n_spec}, "
+                  f"final depth {stats['spec_depth']})")
     print(f"served {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s, "
           f"{stats['host_syncs']/max(n_tok, 1):.3f} host syncs/token; "

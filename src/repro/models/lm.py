@@ -238,6 +238,42 @@ def _attn_decode(p, x, cache, lengths, cfg: ModelConfig):
     return y, new_cache
 
 
+def cow_copy_blocks(pcache: dict, src, dst, any_flag):
+    """Round-level copy-on-write for the paged pools: copy block ``src[b]``'s
+    rows into block ``dst[b]`` in every attention layer's ``pk``/``pv``
+    pool (``stack`` and ``prefix`` groups; pool leaves are
+    ``[n_periods, num_blocks + 1, bs, Kv, hd]``).
+
+    This materializes the private copy ``alloc_span(..., cow=True)``
+    rewired a slot's shared first span block to (engine/spec.py): the copy
+    must land *before* any draft or verify write of the round touches the
+    block, which is why it happens once per round here rather than inside
+    the per-layer write (the decode path's in-layer ``cow_src`` copy in
+    :func:`_attn_decode_paged` is the single-step analogue).  Slots without
+    a CoW carry ``src == dst`` (both the trash index), so their scatter is
+    a trash-block no-op; the whole copy is gated on ``any_flag`` because
+    at most one round per partial prefix hit ever CoWs.
+    """
+    def copy_group(group):
+        out = {}
+        for lk, lv in group.items():
+            nl = dict(lv)
+            for name in ("pk", "pv"):
+                if name in lv:
+                    nl[name] = lv[name].at[:, dst].set(lv[name][:, src])
+            out[lk] = nl
+        return out
+
+    def do(c):
+        new = dict(c)
+        for grp in ("stack", "prefix"):
+            if grp in c:
+                new[grp] = copy_group(c[grp])
+        return new
+
+    return jax.lax.cond(any_flag, do, lambda c: dict(c), pcache)
+
+
 def _attn_decode_paged(p, x, cache, pctx, cfg: ModelConfig):
     """Self-attn decode against the paged block pool.
 

@@ -95,6 +95,12 @@ FULL_MATRIX = QUICK_MATRIX + (
     Case("ssm-spec", arch="mamba2-780m", spec=True),
     Case("hybrid-chunked", arch="jamba-v0.1-52b", chunked=True,
          cache_len=64, chunk_size=32),
+    # the composed dispatch: speculation x chunked prefill and
+    # speculation x prefix cache run both speculative entries (the pure
+    # rounds and the rounds + in-scan prefill phase) under the same
+    # donation / fingerprint / dtype contracts
+    Case("dense-spec-chunked", spec=True, chunked=True),
+    Case("dense-spec-prefix", spec=True, prefix=True),
     Case("dense-contig-mesh", mesh=True),
 )
 MATRICES = {"quick": QUICK_MATRIX, "full": FULL_MATRIX}
@@ -102,6 +108,9 @@ MATRICES = {"quick": QUICK_MATRIX, "full": FULL_MATRIX}
 
 def case_entry_names(case: Case) -> tuple[str, ...]:
     """The entries this configuration actually exercises at runtime."""
+    if case.spec and (case.chunked or case.prefix):
+        return ("_dispatch_spec", "_dispatch_spec_chunk", "_admit_chunk",
+                "_evict")
     if case.chunked or case.prefix:
         return ("_dispatch", "_dispatch_chunk", "_admit_chunk", "_evict")
     if case.spec:
@@ -168,8 +177,12 @@ def entry_args(eng, case: Case, name: str) -> tuple:
         return (eng.params, state, cache, key)
     if name == "_dispatch_chunk":
         return (eng.params, state, cache, key)
-    if name == "_dispatch_spec":
-        return (eng.params, eng._draft_params, state, cache, key)
+    if name in ("_dispatch_spec", "_dispatch_spec_chunk"):
+        # depth is the runtime dynamic-speculation-depth operand: a strong
+        # int32 scalar, so every value shares one traced signature (the
+        # fingerprint contract pins that no depth move ever recompiles)
+        return (eng.params, eng._draft_params, state, cache,
+                jnp.int32(1), key)
     if name == "_admit_chunk":
         shared = jnp.full((eng._mb,), -1, jnp.int32)
         toks = jnp.zeros((pcap,), jnp.int32)

@@ -1,7 +1,10 @@
 """Self-speculative decoding tests: greedy token-exactness against the
 non-speculative paged engine across every family (any draft, good or
-terrible), rollback/allocator invariants under randomized stress, the
-acceptance rules as pure functions, sampler distribution correctness
+terrible), the composed-config matrix (speculation × prefix cache ×
+chunked prefill, including warm partial hits that copy-on-write the
+speculative span), rollback/allocator invariants under randomized stress,
+the dynamic-depth controller (pinned trajectories + zero recompiles),
+the acceptance rules as pure functions, sampler distribution correctness
 (temperature / top-k / top-p frequency + lossless rejection-sampling
 unbiasedness), config validation, and the quantized-head matmul."""
 import dataclasses
@@ -15,8 +18,9 @@ from hypothesis import strategies as st
 
 from repro.configs import QuantConfig, get_arch, reduced
 from repro.data import LanguageSpec, sample_batch
-from repro.engine import (Engine, SamplingParams, blocks_for, greedy_accept,
-                          probs, rejection_accept, sample)
+from repro.engine import (DepthController, Engine, SamplingParams,
+                          alloc_span, blocks_for, greedy_accept,
+                          init_block_state, probs, rejection_accept, sample)
 from repro.models import build_model
 from repro.quantize import quantize
 
@@ -51,6 +55,18 @@ def _prompts(spec, lens, seed=0):
             for i, L in enumerate(lens)]
 
 
+def _shared_prompts(spec, lens, share, seed=0, dup=True):
+    """Prompts sharing a ``share``-token system prefix; with ``dup`` the
+    first prompt is appended again verbatim, so serving it a second time
+    lands a warm *partial* hit (the whole prompt, final part-block
+    included, is already cached — the spot where a speculative span's
+    first entry is a shared block and must copy-on-write)."""
+    pre = sample_batch(jax.random.PRNGKey(7 + seed), spec, 1, share)[0][:share]
+    tails = _prompts(spec, [L - share for L in lens], seed=seed)
+    out = [jnp.concatenate([pre, t]) for t in tails]
+    return out + [out[0]] if dup else out
+
+
 # ---------------------------------------------------------------------------
 # Greedy token-exactness: spec == non-spec paged engine, every family
 # ---------------------------------------------------------------------------
@@ -82,6 +98,86 @@ def test_spec_token_exact_matrix():
         assert outs == base, arch
         assert stats["draft_tokens"] > 0
         assert 0 < stats["draft_accepted"] <= stats["draft_tokens"], arch
+
+
+def test_spec_composed_token_exact_matrix():
+    """The full composition — speculation × prefix cache × chunked
+    prefill — must equal the *non-speculative* paged+prefix engine token
+    for token on every family.  Prompts share a system prefix and one
+    prompt repeats verbatim, so the dense/MoE runs land full-block hits,
+    a warm partial hit (copy-on-write of the speculative span's first
+    entry), and admissions that start chunking while resident slots are
+    mid-speculation.  Ring (SWA) and recurrent (SSM/hybrid) families run
+    the same composition unshared — exactness must hold with zero hits
+    too."""
+    cases = [
+        # arch, moe, chunk, lens (> share), cache_len, hits expected
+        ("glm4-9b", False, 8, [18, 25, 18, 21], 40, True),
+        ("mixtral-8x22b", True, 8, [18, 21, 18], 34, False),   # SWA ring
+        ("deepseek-v3", True, 8, [18, 21, 18], 34, True),      # MoE
+        ("mamba2-780m", False, 32, [18, 40, 18], 48, False),   # pure SSM
+        ("jamba-v0.1-52b", True, 32, [18, 40, 18], 48, False),  # hybrid
+    ]
+    for arch, moe, chunk, lens, cache_len, can_hit in cases:
+        cfg, model, params, draft, _, spec = _setup(arch, dropless=moe)
+        prompts = _shared_prompts(spec, lens, share=16)
+        base = Engine(model, params, slots=2, cache_len=cache_len,
+                      k_steps=3, paged=True, block_size=8, chunk_size=chunk,
+                      prefix_cache=True).serve(prompts, gen_tokens=5)
+        seng = Engine(model, params, slots=2, cache_len=cache_len,
+                      k_steps=3, paged=True, block_size=8, chunk_size=chunk,
+                      prefix_cache=True, n_spec=2, draft_params=draft,
+                      check_invariants=True)
+        outs, stats = seng.serve(prompts, gen_tokens=5, return_stats=True)
+        assert outs == base, arch
+        assert 0 < stats["draft_accepted"] <= stats["draft_tokens"], arch
+        if can_hit:  # shared prefix + duplicated prompt must actually hit
+            assert stats["prefix_hits"] > 0, arch
+        else:        # ring / recurrent caches never share
+            assert stats["prefix_hits"] == 0, arch
+
+
+def test_spec_composed_warm_prefix_hit_mid_speculation():
+    """Serving the same requests twice on one composed engine: the second
+    pass is fully warm — every admission is a prefix hit landing while a
+    resident slot is mid-speculation, and the duplicated prompt's partial
+    hit forces the speculative span's first entry through copy-on-write.
+    Both passes must match the non-speculative prefix engine served
+    identically."""
+    cfg, model, params, draft, _, spec = _setup()
+    prompts = _shared_prompts(spec, [18, 25, 21], share=16)
+    base = Engine(model, params, slots=2, cache_len=40, k_steps=3,
+                  paged=True, block_size=8, chunk_size=8, prefix_cache=True)
+    b1 = base.serve(prompts, gen_tokens=5)
+    b2 = base.serve(prompts, gen_tokens=5)
+    seng = Engine(model, params, slots=2, cache_len=40, k_steps=3,
+                  paged=True, block_size=8, chunk_size=8, prefix_cache=True,
+                  n_spec=2, draft_params=draft, check_invariants=True)
+    o1, s1 = seng.serve(prompts, gen_tokens=5, return_stats=True)
+    o2, s2 = seng.serve(prompts, gen_tokens=5, return_stats=True)
+    assert o1 == b1 and o2 == b2
+    assert s2["prefix_hits"] > s1["prefix_hits"]   # warm second pass
+    assert s2["draft_accepted"] > 0
+
+
+def test_spec_composed_exact_for_garbage_draft():
+    """A wrong-seed draft (≈0% acceptance, a rollback every round) through
+    the full composition: every rollback rolls a length back *into* CoW'd
+    and freshly-popped span blocks, and the output must still equal the
+    non-speculative prefix engine exactly."""
+    cfg, model, params, _, bad, spec = _setup()
+    prompts = _shared_prompts(spec, [18, 21, 18], share=16)
+    base = Engine(model, params, slots=2, cache_len=40, k_steps=4,
+                  paged=True, block_size=8, chunk_size=8, prefix_cache=True
+                  ).serve(prompts, gen_tokens=6)
+    outs, stats = Engine(model, params, slots=2, cache_len=40, k_steps=4,
+                         paged=True, block_size=8, chunk_size=8,
+                         prefix_cache=True, n_spec=2, draft_params=bad,
+                         check_invariants=True
+                         ).serve(prompts, gen_tokens=6, return_stats=True)
+    assert outs == base
+    assert stats["prefix_hits"] > 0
+    assert stats["draft_accepted"] < stats["draft_tokens"] // 4
 
 
 def test_spec_exact_for_any_draft_even_garbage():
@@ -191,6 +287,201 @@ def test_spec_stress_randomized(seed):
                   num_blocks=num_blocks, n_spec=n_spec, draft_params=dtree,
                   check_invariants=True).serve(prompts, gen_tokens=gen)
     assert outs == base
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_spec_composed_stress_randomized(seed):
+    """The composed sweep: random shared-prefix workloads (one prompt
+    duplicated, so warm partial hits copy-on-write the speculative span)
+    through speculation × prefix cache × chunked prefill, with the pool
+    randomly squeezed down to *exactly* the reservation bound — lifetime
+    blocks + n_spec slack + the one-CoW spare.  Refcount conservation
+    (``n_free + |ref>0| == num_blocks``) is asserted after every dispatch
+    (check_invariants), i.e. after every speculative rollback and CoW pop;
+    output must equal the non-speculative prefix engine token for token."""
+    rng = np.random.RandomState(seed)
+    cfg, model, params, draft, bad, spec = _setup()
+    slots = 2
+    n_req = int(rng.randint(slots, slots + 3))
+    share = 8 * int(rng.randint(0, 3))             # 0 / 8 / 16 shared rows
+    lens = [int(rng.randint(share + 2, 29)) for _ in range(n_req)]
+    gen = int(rng.randint(2, 7))
+    k_steps = int(rng.randint(2, 4))
+    n_spec = int(rng.randint(1, k_steps))          # < k_steps
+    chunk = 8 * int(rng.randint(1, 3))
+    cache_len = max(lens) + gen + int(rng.randint(0, 6))
+    dtree = draft if seed % 2 == 0 else bad
+    prompts = _shared_prompts(spec, lens, share, seed=seed % 997)
+
+    base = Engine(model, params, slots=slots, cache_len=cache_len,
+                  k_steps=k_steps, paged=True, block_size=8,
+                  chunk_size=chunk, prefix_cache=True
+                  ).serve(prompts, gen_tokens=gen)
+    mb = blocks_for(cache_len, 8)
+    lo = max(min(blocks_for(L + gen - 1 + n_spec, 8), mb)
+             for L in lens) + 1                    # + the CoW spare
+    num_blocks = int(rng.randint(lo, slots * mb + 1))
+    outs = Engine(model, params, slots=slots, cache_len=cache_len,
+                  k_steps=k_steps, paged=True, block_size=8,
+                  chunk_size=chunk, prefix_cache=True,
+                  num_blocks=num_blocks, n_spec=n_spec, draft_params=dtree,
+                  check_invariants=True).serve(prompts, gen_tokens=gen)
+    assert outs == base
+
+
+# ---------------------------------------------------------------------------
+# Dynamic draft depth: controller trajectories + zero recompiles
+# ---------------------------------------------------------------------------
+
+def test_depth_controller_pinned_trajectories():
+    """AIMD depth moves on synthetic acceptance traces, pinned exactly."""
+    # sustained hits at the ceiling stay at the ceiling
+    c = DepthController(4)
+    assert c.depth == 4
+    assert [c.update(8, 8) for _ in range(5)] == [4] * 5
+    # sustained misses halve to 1 and stay: 4 -> 2 -> 1 -> 1
+    c = DepthController(4)
+    assert [c.update(8, 0) for _ in range(4)] == [2, 1, 1, 1]
+    # climb from 1: one step up per `patience` consecutive hits
+    c = DepthController(4, depth=1)
+    assert [c.update(4, 4) for _ in range(8)] == [1, 2, 2, 3, 3, 4, 4, 4]
+    # alternating hit/miss decays to 1 and is stable there
+    c = DepthController(4)
+    trace = [c.update(4, 4 if i % 2 == 0 else 0) for i in range(8)]
+    assert trace == [4, 2, 2, 1, 1, 1, 1, 1]
+    # mid-band rates hold depth and reset the hit streak
+    c = DepthController(4, depth=2)
+    assert [c.update(10, r) for r in (10, 6, 10, 6)] == [2, 2, 2, 2]
+    # zero-draft dispatches (all slots prefilling) are no evidence: depth
+    # *and* streak survive them
+    c = DepthController(4, depth=1)
+    assert c.update(4, 4) == 1
+    assert c.update(0, 0) == 1
+    assert c.update(4, 4) == 2      # streak was preserved across the gap
+
+
+def test_depth_controller_validation_and_clamps():
+    with pytest.raises(ValueError, match="n_max"):
+        DepthController(0)
+    assert DepthController(2, depth=5).depth == 2    # clamped into 1..n_max
+    assert DepthController(3).depth == 3             # depth=0 -> start at max
+    # static mode (thresholds outside [0,1]) never moves
+    c = DepthController(4, lo=-1.0, hi=2.0)
+    assert [c.update(4, a) for a in (4, 0, 4, 0)] == [4, 4, 4, 4]
+
+
+def test_spec_depth_swing_zero_recompiles():
+    """Depth is a runtime operand of the jitted dispatch: a garbage draft
+    collapses the controller from n_spec to 1 *within* a serve, and a
+    second (warm-prefix) serve swings it again from the top — the jit
+    cache must hold exactly one traced signature per speculative entry
+    point throughout (no shape drift, no weak-type literals)."""
+    cfg, model, params, draft, bad, spec = _setup()
+    prompts = _shared_prompts(spec, [18, 21, 18], share=16)
+    eng = Engine(model, params, slots=2, cache_len=40, k_steps=4,
+                 paged=True, block_size=8, chunk_size=8, prefix_cache=True,
+                 n_spec=3, draft_params=bad, check_invariants=True)
+    _, stats = eng.serve(prompts, gen_tokens=6, return_stats=True)
+    assert stats["spec_depth"] == 1        # ~0% acceptance collapsed it
+    counts = eng.compile_counts()
+    spec_entries = [n for n in counts if "spec" in n]
+    assert spec_entries
+    if all(v >= 0 for v in counts.values()):   # cache-size probe available
+        assert all(counts[n] <= 1 for n in spec_entries), counts
+        eng.serve(prompts, gen_tokens=6)       # warm pass, fresh swing
+        assert eng.compile_counts() == counts  # flat: zero recompiles
+
+
+# ---------------------------------------------------------------------------
+# alloc_span copy-on-write (the composed allocator primitive, in isolation)
+# ---------------------------------------------------------------------------
+
+def _shared_block_state():
+    """Slot 0 holds block 0 — a partially-filled prompt block also
+    referenced by the prefix index (ref 2); slot 1 is inactive.  Blocks
+    1..3 are free."""
+    b = init_block_state(2, 4, 4)
+    return {**b,
+            "tbl": b["tbl"].at[0, 0].set(0),
+            "ref": b["ref"].at[0].set(2),
+            "free": jnp.asarray([1, 2, 3, 0], jnp.int32),
+            "n_free": jnp.int32(3),
+            "slot_active": jnp.asarray([True, False])}
+
+
+def test_alloc_span_cow_pops_rewires_and_reports():
+    """A shared first span entry gets a private block popped, the table
+    rewired, one reference dropped on the source, and the (src, dst) pair
+    reported for the row copy; the inactive slot reports the no-copy
+    sentinel (src == dst) and conservation holds."""
+    b = _shared_block_state()
+    out, src, dst, blocked = alloc_span(
+        b, jnp.asarray([4, 0], jnp.int32), 2, 8, 32, False, cow=True)
+    new = int(out["tbl"][0, 0])
+    assert new != 0 and int(out["ref"][new]) == 1
+    assert int(out["ref"][0]) == 1            # index still holds the source
+    assert int(out["n_free"]) == 2
+    assert (int(src[0]), int(dst[0])) == (0, new)
+    assert int(src[1]) == int(dst[1])         # slot 1: nothing to copy
+    assert not bool(blocked[0]) and not bool(blocked[1])
+    assert int(out["n_free"]) + int(jnp.sum(out["ref"] > 0)) == 4
+
+
+def test_alloc_span_cow_skips_private_blocks():
+    """ref == 1 (a block this slot owns outright) is not shared: no pop,
+    no copy pair, the table entry stays."""
+    b = _shared_block_state()
+    b = {**b, "ref": b["ref"].at[0].set(1)}
+    out, src, dst, blocked = alloc_span(
+        b, jnp.asarray([4, 0], jnp.int32), 2, 8, 32, False, cow=True)
+    assert int(out["tbl"][0, 0]) == 0
+    assert int(out["n_free"]) == 3
+    assert int(src[0]) == int(dst[0])
+    assert not bool(blocked[0])
+
+
+def test_alloc_span_cow_spanning_into_fresh_block():
+    """A span crossing from the shared block into unallocated territory
+    pops two blocks in one call — a CoW replacement for entry 0 and a
+    plain allocation for entry 1 — and decrements only the shared
+    source."""
+    b = _shared_block_state()
+    out, src, dst, blocked = alloc_span(
+        b, jnp.asarray([6, 0], jnp.int32), 4, 8, 32, False, cow=True)
+    e0, e1 = int(out["tbl"][0, 0]), int(out["tbl"][0, 1])
+    assert e0 != 0 and e1 >= 0 and e1 != e0
+    assert int(out["ref"][0]) == 1 and int(out["ref"][e0]) == 1
+    assert int(out["ref"][e1]) == 1
+    assert int(out["n_free"]) == 1
+    assert (int(src[0]), int(dst[0])) == (0, e0)
+    assert int(out["n_free"]) + int(jnp.sum(out["ref"] > 0)) == 4
+
+
+def test_alloc_span_cow_dry_pool_blocks_the_slot():
+    """With the free stack empty a shared first entry cannot CoW: the
+    slot is reported blocked, and *nothing* moves — table, refs and the
+    stack are untouched, so the round can mask the slot out and retry."""
+    b = _shared_block_state()
+    b = {**b, "n_free": jnp.int32(0)}
+    out, src, dst, blocked = alloc_span(
+        b, jnp.asarray([4, 0], jnp.int32), 2, 8, 32, False, cow=True)
+    assert bool(blocked[0]) and not bool(blocked[1])
+    assert int(out["tbl"][0, 0]) == 0
+    assert int(out["ref"][0]) == 2
+    assert int(out["n_free"]) == 0
+    assert int(src[0]) == int(dst[0])         # no copy while blocked
+
+
+def test_alloc_span_ring_is_a_no_op():
+    """Ring (SWA) tables are fully allocated at admission and never
+    shared: the ring case pops nothing and reports no-copy sentinels."""
+    b = _shared_block_state()
+    out, src, dst, blocked = alloc_span(
+        b, jnp.asarray([4, 0], jnp.int32), 2, 8, 32, True, cow=True)
+    assert int(out["n_free"]) == 3
+    assert np.asarray(src == dst).all()
+    assert not np.asarray(blocked).any()
 
 
 # ---------------------------------------------------------------------------
@@ -310,9 +601,6 @@ def test_spec_config_validation():
     with pytest.raises(ValueError, match="paged"):
         Engine(model, params, slots=2, cache_len=32, n_spec=2,
                draft_params=draft)
-    with pytest.raises(ValueError, match="chunked prefill"):
-        Engine(model, params, slots=2, cache_len=32, paged=True,
-               block_size=8, chunk_size=8, n_spec=2, draft_params=draft)
     with pytest.raises(ValueError, match="n_spec must be < k_steps"):
         Engine(model, params, slots=2, cache_len=32, paged=True,
                block_size=8, k_steps=2, n_spec=2, draft_params=draft)
@@ -322,6 +610,21 @@ def test_spec_config_validation():
     with pytest.raises(ValueError, match="draft_params without n_spec"):
         Engine(model, params, slots=2, cache_len=32, paged=True,
                block_size=8, draft_params=draft)
+
+
+def test_spec_composes_with_prefix_and_chunking():
+    """The former restriction is gone: n_spec composed with prefix_cache
+    *and* chunk_size constructs, serves, and matches the non-speculative
+    prefix engine — at the deepest draft (n_spec = k_steps - 1)."""
+    cfg, model, params, draft, _, spec = _setup()
+    prompts = _prompts(spec, [10, 13])
+    base = Engine(model, params, slots=2, cache_len=48, k_steps=5,
+                  paged=True, block_size=8, chunk_size=8, prefix_cache=True
+                  ).serve(prompts, gen_tokens=4)
+    eng = Engine(model, params, slots=2, cache_len=48, k_steps=5,
+                 paged=True, block_size=8, chunk_size=8, prefix_cache=True,
+                 n_spec=4, draft_params=draft, check_invariants=True)
+    assert eng.serve(prompts, gen_tokens=4) == base
 
 
 def test_spec_rejects_capacity_routed_moe():
