@@ -10,10 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, time_call, write_bench
 
 
-def bench_scale_search() -> None:
+def bench_scale_search() -> list[dict]:
     from repro.configs import QuantConfig
     from repro.core.search import search_scale
     from repro.kernels.scale_search import ops as K
@@ -31,17 +31,20 @@ def bench_scale_search() -> None:
                f"fused={bytes_fused/1e6:.1f}MB "
                f"reduction={bytes_naive/bytes_fused:.1f}x")
 
+    rows = []
     # wall-time of the jnp reference sweep (the compute itself)
     us = time_call(lambda: K.sweep(wp, wb, alphas, block_size=128,
                                    use_kernel=False))
-    emit("scale_search.sweep_ref_1024x1024x16cand", us, derived)
+    rows.append(emit("scale_search.sweep_ref_1024x1024x16cand", us, derived))
 
     q = QuantConfig(metric="sign", granularity="block")
     us = time_call(lambda: search_scale(wp, wb, q))
-    emit("scale_search.alg1_naive_1024x1024", us, "paper Alg.1, 5+10 cand")
+    rows.append(emit("scale_search.alg1_naive_1024x1024", us,
+                     "paper Alg.1, 5+10 cand"))
+    return rows
 
 
-def bench_fp8_matmul() -> None:
+def bench_fp8_matmul() -> list[dict]:
     from repro.kernels.fp8_matmul.ref import matmul_fp8_ref
     from repro.kernels.fp8_quant.ops import quantize_fp8
 
@@ -54,13 +57,15 @@ def bench_fp8_matmul() -> None:
 
     derived = (f"weight_bytes bf16={K*N*2/1e6:.1f}MB fp8={K*N/1e6:.1f}MB "
                f"decode_roofline=2.0x")
+    rows = []
     us = time_call(jax.jit(lambda x, q, s: matmul_fp8_ref(x, q, s)), x, q, s)
-    emit("fp8_matmul.dequant_ref_128x1024x1024", us, derived)
+    rows.append(emit("fp8_matmul.dequant_ref_128x1024x1024", us, derived))
     us = time_call(jax.jit(lambda x, w: x @ w), x, wbf)
-    emit("fp8_matmul.bf16_dense_128x1024x1024", us, "")
+    rows.append(emit("fp8_matmul.bf16_dense_128x1024x1024", us, ""))
+    return rows
 
 
-def bench_quantize_tree() -> None:
+def bench_quantize_tree() -> list[dict]:
     from repro.configs import QuantConfig
     from repro.quantize import quantize
 
@@ -73,13 +78,14 @@ def bench_quantize_tree() -> None:
     q = QuantConfig(method="daq", metric="sign", granularity="block")
     us = time_call(lambda: quantize(post, base, q)[0])
     n = sum(x.size for x in jax.tree.leaves(post))
-    emit("daq.quantize_tree_1.6Mparam", us, f"params={n}")
+    return [emit("daq.quantize_tree_1.6Mparam", us, f"params={n}")]
 
 
 def main() -> None:
-    bench_scale_search()
-    bench_fp8_matmul()
-    bench_quantize_tree()
+    rows = bench_scale_search() + bench_fp8_matmul() + bench_quantize_tree()
+    write_bench("BENCH_kernels.json", rows,
+                workload={"suite": "kernels",
+                          "cases": [r["name"] for r in rows]})
 
 
 if __name__ == "__main__":

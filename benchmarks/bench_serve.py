@@ -71,10 +71,14 @@ def _row(dt, stats):
 def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
         prompt_len: int = 16, gen: int = 24, k_steps: int = 8,
         block_size: int = 8, out_path: str = "BENCH_serve.json") -> dict:
+    from repro.telemetry import MetricsRegistry
     cfg = reduced(get_arch(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     spec = LanguageSpec(vocab=cfg.vocab_size)
+    # request-lifecycle metrics from the observability-rich engines
+    # (prefix-cached + chunked) ride the artifact via run_meta(metrics=)
+    reg = MetricsRegistry()
 
     # ---- uniform workload --------------------------------------------------
     prompts = [sample_batch(jax.random.PRNGKey(i), spec, 1, prompt_len)[0]
@@ -155,7 +159,8 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
                       k_steps=k_steps, paged=True, block_size=block_size)
     sx_prefix = Engine(model, params, slots=batch, cache_len=px_cache_len,
                        k_steps=k_steps, paged=True, block_size=block_size,
-                       prefix_cache=True, chunk_size=4 * block_size)
+                       prefix_cache=True, chunk_size=4 * block_size,
+                       metrics=reg)
     sraced = _race({
         "engine": lambda: sx_eng.serve(shared_reqs, gen_tokens=gen,
                                        return_stats=True),
@@ -187,7 +192,7 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
                       k_steps=k_steps, paged=True, block_size=block_size)
     lp_chunk = Engine(model, params, slots=batch, cache_len=lp_cache_len,
                       k_steps=k_steps, paged=True, block_size=block_size,
-                      chunk_size=2 * block_size)
+                      chunk_size=2 * block_size, metrics=reg)
     lraced = _race({
         "engine": lambda: lp_eng.serve(lp_reqs, gen_tokens=gen,
                                        return_stats=True),
@@ -246,7 +251,7 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
     result["mixed"]["cache_bytes_ratio"] = (
         result["mixed"]["paged"]["cache_bytes"]
         / max(result["mixed"]["engine"]["cache_bytes"], 1))
-    result["meta"] = run_meta(result["workload"])
+    result["meta"] = run_meta(result["workload"], metrics=reg)
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     emit("serve.old_host_loop", old_dt * 1e6,

@@ -55,6 +55,8 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
         n_spec: int = 4, block_size: int = 8,
         methods: tuple = ("daq", "absmax"),
         out_path: str = "BENCH_spec.json") -> dict:
+    from repro.telemetry import MetricsRegistry
+    reg = MetricsRegistry()   # shared: all engines' lifecycle metrics
     cfg = reduced(get_arch(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -83,7 +85,7 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
         drafts_trees[method] = dtree
         eng = Engine(model, params, slots=batch, cache_len=cache_len,
                      k_steps=k_steps, paged=True, block_size=block_size,
-                     n_spec=n_spec, draft_params=dtree)
+                     n_spec=n_spec, draft_params=dtree, metrics=reg)
         engines[f"spec-{method}"] = (
             lambda e=eng: e.serve(prompts, gen_tokens=gen,
                                   return_stats=True))
@@ -132,8 +134,9 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
          f"tok_per_s={result['paged']['tok_per_s']:.1f}")
     result["shared_prefix"] = _run_shared(
         model, params, drafts_trees, spec, batch=batch, requests=requests,
-        gen=gen, k_steps=k_steps, n_spec=n_spec, block_size=block_size)
-    result["meta"] = run_meta(result["workload"])
+        gen=gen, k_steps=k_steps, n_spec=n_spec, block_size=block_size,
+        metrics=reg)
+    result["meta"] = run_meta(result["workload"], metrics=reg)
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
     return result
@@ -142,7 +145,7 @@ def run(arch: str = "glm4-9b", requests: int = 8, batch: int = 4,
 def _run_shared(model, params, drafts_trees: dict, spec, *, batch: int,
                 requests: int, gen: int, k_steps: int, n_spec: int,
                 block_size: int, system_len: int = 32,
-                tail_len: int = 16, chunk: int = 16) -> dict:
+                tail_len: int = 16, chunk: int = 16, metrics=None) -> dict:
     """The composed serving workload: every request opens with the same
     system prompt, engines run speculation × prefix cache × chunked
     prefill.  ``_race`` warms each engine once, so the timed passes hit a
@@ -163,7 +166,8 @@ def _run_shared(model, params, drafts_trees: dict, spec, *, batch: int,
             else {}
         return Engine(model, params, slots=batch, cache_len=cache_len,
                       k_steps=k_steps, paged=True, block_size=block_size,
-                      chunk_size=chunk, prefix_cache=True, **kw)
+                      chunk_size=chunk, prefix_cache=True, metrics=metrics,
+                      **kw)
 
     beng = mk()
     engines = {"prefix": lambda: beng.serve(prompts, gen_tokens=gen,

@@ -10,11 +10,16 @@ from pathlib import Path
 import jax
 
 
-def run_meta(workload: dict | None = None) -> dict:
+def run_meta(workload: dict | None = None, metrics=None) -> dict:
     """Provenance stamp for benchmark artifacts: commit SHA (suffixed
     ``-dirty`` when the tree has uncommitted changes), jax version and
     backend, and a fingerprint of the workload config — so two BENCH
-    files are comparable (or provably not) at a glance."""
+    files are comparable (or provably not) at a glance.
+
+    ``metrics`` (a ``repro.telemetry.MetricsRegistry``) embeds the run's
+    metrics snapshot under ``meta["metrics"]`` — the same stable-schema
+    JSON the serve CLI writes, so benchmark artifacts diff against serve
+    runs with the same tooling."""
     here = Path(__file__).resolve().parent
     sha = "unknown"
     try:
@@ -41,6 +46,8 @@ def run_meta(workload: dict | None = None) -> dict:
         blob = json.dumps(workload, sort_keys=True, default=str)
         meta["config_fingerprint"] = hashlib.sha256(
             blob.encode()).hexdigest()[:16]
+    if metrics is not None:
+        meta["metrics"] = metrics.snapshot()
     return meta
 
 
@@ -57,5 +64,18 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
+def emit(name: str, us: float, derived: str = "") -> dict:
+    """Print one CSV result line and return it as a row dict, so callers
+    can collect rows for a ``write_bench`` artifact."""
     print(f"{name},{us:.1f},{derived}", flush=True)
+    return {"name": name, "us": round(us, 1), "derived": derived}
+
+
+def write_bench(path, rows: list[dict], workload: dict | None = None,
+                metrics=None) -> None:
+    """Write a ``BENCH_*.json`` artifact: ``run_meta`` provenance (commit,
+    backend, config fingerprint, optional metrics snapshot) + the result
+    rows — the machine-diffable counterpart of the CSV stdout."""
+    doc = {"meta": run_meta(workload, metrics=metrics), "rows": rows}
+    Path(path).write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(f"[bench] wrote {path} ({len(rows)} rows)", flush=True)

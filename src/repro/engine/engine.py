@@ -83,6 +83,7 @@ those configs fall back to equal-length grouping automatically.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -95,6 +96,8 @@ from repro.engine.prefix import PrefixIndex
 from repro.engine.sampler import SamplingParams, sample
 from repro.engine.scheduler import init_slot_state, make_decode_dispatch
 from repro.models.lm import Model
+from repro.telemetry.counters import (COUNTER_KEYS, bump, counter_totals,
+                                      init_counters)
 
 _BKEYS = P.BSTATE_KEYS
 
@@ -135,11 +138,17 @@ class Engine:
     """Continuous-batching serving engine over a built :class:`Model`."""
 
     def __init__(self, model: Model, params, cfg: EngineConfig | None = None,
-                 *, mesh=None, draft_params=None, **kw):
+                 *, mesh=None, draft_params=None, metrics=None, tracer=None,
+                 **kw):
         if cfg is None:
             cfg = EngineConfig(**kw)
         elif kw:
             raise TypeError("pass either cfg= or keyword fields, not both")
+        # host-side observability (repro.telemetry) — both optional, both
+        # fed exclusively from values the serve loop already fetched, so
+        # enabling them changes no jitted signature and adds no host sync
+        self.metrics = metrics      # MetricsRegistry | None
+        self.tracer = tracer        # Tracer | None
         if model.cfg.family in ("vlm", "encdec"):
             raise NotImplementedError(
                 "Engine drives LM-style models; vlm/encdec need modality "
@@ -271,7 +280,7 @@ class Engine:
                 "_admit_chunk", self._admit_chunk_impl, donate=(0, 1),
                 cache_arg=0, cache_out=0)
             self._evict = self._register(
-                "_evict", self._evict_impl, donate=(0,),
+                "_evict", self._evict_impl, donate=(0, 1),
                 cache_arg=0, cache_out=0)
         self._scatter = self._register(
             "_scatter", self._scatter_impl, donate=(0, 1),
@@ -389,8 +398,10 @@ class Engine:
         (SSM) leaves slot-wise — one jitted update for the whole group."""
         B = state["active"].shape[0]
         bstate = {k: cache[k] for k in _BKEYS}
+        nf0 = bstate["n_free"]
         done = jnp.zeros((B,), bool).at[slots].set(True)
         bstate = P.release_slots(bstate, done)
+        released = bstate["n_free"] - nf0
 
         # static block geometry from the part tree (absent for pure-SSM)
         nbl = 0
@@ -400,14 +411,19 @@ class Engine:
                           if "pk" in l)["pk"].shape[2]
                 nbl = lcache["k"].shape[2] // bs
                 break
+        popped = jnp.int32(0)
         if nbl:
+            nf1 = bstate["n_free"]
             bstate, wids = P.alloc_admit(bstate, slots, counts, nbl)
+            popped = nf1 - bstate["n_free"]
         # a slot that owes no decode steps must not write or grow; its
         # blocks are released again right below (the KV is never read —
         # the single output token came straight from the prefill logits)
         bstate["slot_active"] = bstate["slot_active"].at[slots].set(
             remaining0 > 0)
+        nf2 = bstate["n_free"]
         bstate = P.release_slots(bstate, done & (remaining0 <= 0))
+        released = released + (bstate["n_free"] - nf2)
 
         def scatter_group(pool_group, part_group):
             new_group = {}
@@ -439,6 +455,8 @@ class Engine:
             "cur": state["cur"].at[slots, 0].set(first),
             "active": state["active"].at[slots].set(remaining0 > 0),
             "remaining": state["remaining"].at[slots].set(remaining0),
+            "ctr": bump(state["ctr"], blocks_popped=popped,
+                        blocks_released=released),
         }
         return new, state
 
@@ -454,8 +472,10 @@ class Engine:
         when the last chunk lands."""
         B = state["active"].shape[0]
         bstate = {k: cache[k] for k in _BKEYS}
+        nf0 = bstate["n_free"]
         done = jnp.zeros((B,), bool).at[slot].set(True)
         bstate = P.release_slots(bstate, done)
+        nf1 = bstate["n_free"]
         bstate, new_ids = P.admit_slot(bstate, slot, shared_ids, n_shared,
                                        n_new, n_retained, self._mb)
 
@@ -480,21 +500,37 @@ class Engine:
             "pf_len": state["pf_len"].at[slot].set(L),
             "budget": state["budget"].at[slot].set(budget),
             "pf_shared": state["pf_shared"].at[slot].set(shared_until),
+            # pf_start (not shared_until): tokens actually skipped, the
+            # same quantity the host's stats["prefix_hits"] accumulates
+            "ctr": bump(state["ctr"],
+                        prefix_hit_tokens=pf_start,
+                        blocks_released=nf1 - nf0,
+                        blocks_popped=nf1 - bstate["n_free"]),
         }
         return new, state, new_ids
 
     @staticmethod
-    def _evict_impl(cache, ids):
+    def _evict_impl(cache, state, ids):
+        """Drop host holds on ``ids`` and count the blocks that actually
+        hit the free stack on the device counter tree."""
+        nf0 = cache["n_free"]
         bstate = P.release_refs({k: cache[k] for k in _BKEYS}, ids)
-        return {**cache, **bstate}
+        state = {**state,
+                 "ctr": bump(state["ctr"],
+                             blocks_released=bstate["n_free"] - nf0)}
+        return {**cache, **bstate}, state
 
     # -- allocator invariants (check_invariants=True) -----------------------
 
-    def _assert_invariants(self, cache) -> None:
+    def _assert_invariants(self, cache, state=None) -> None:
         """Conservation of the block pool, checked on the device truth:
         free stack and referenced blocks partition the pool, and every
         block's refcount equals its live table references plus the host's
-        index/pending hold."""
+        index/pending hold.  With ``state`` the device counter tree is
+        checked too: pops minus releases must account for every block out
+        of the free stack since the counters were zeroed
+        ("popped == released + live"), and every drafted position must be
+        either accepted or rejected."""
         bs = jax.device_get({k: cache[k] for k in _BKEYS})
         NB = self._num_blocks
         n_free = int(bs["n_free"])
@@ -515,6 +551,16 @@ class Engine:
             assert ref[b] == expect, (
                 f"block {b}: ref {ref[b]} != tables {counts[b]} + "
                 f"hold {int(b in holds)}")
+        if state is not None:
+            ctr = counter_totals(jax.device_get(state["ctr"]))
+            live0 = getattr(self, "_ctr_live0", 0)
+            popped, released = ctr["blocks_popped"], ctr["blocks_released"]
+            assert live0 + popped - released == NB - n_free, (
+                f"counter leak: base {live0} + popped {popped} - released "
+                f"{released} != live {NB - n_free}")
+            assert ctr["drafted"] == ctr["accepted"] + ctr["rejected"], (
+                f"spec counter leak: drafted {ctr['drafted']} != accepted "
+                f"{ctr['accepted']} + rejected {ctr['rejected']}")
 
     def _group_cache_len(self, Lmax: int) -> int:
         """Prefill cache rows for one admitted group.  Contiguous: always
@@ -619,6 +665,84 @@ class Engine:
         return min(P.blocks_for(prompt_len + gen_tokens - 1 + self.cfg.n_spec,
                                 self.cfg.block_size), self._mb)
 
+    # -- telemetry (repro.telemetry) ----------------------------------------
+
+    def _request_done(self, prompt_len, gen_len, t_enq, t_admit, t_first,
+                      prefix_hit_frac=None):
+        """Record one finished request's lifecycle histograms (no-op
+        without a registry; all inputs are host floats already in hand)."""
+        m = self.metrics
+        if m is None:
+            return
+        now = time.perf_counter()
+        m.counter("requests.completed").inc()
+        m.histogram("request.ttft_s", unit="s").observe(t_first - t_enq)
+        m.histogram("request.queue_wait_s", unit="s").observe(
+            t_admit - t_enq)
+        m.histogram("request.tpot_s", unit="s").observe(
+            (now - t_first) / max(gen_len - 1, 1))
+        m.histogram("request.prompt_len", lo=1.0, hi=1e6,
+                    unit="tokens").observe(prompt_len)
+        m.histogram("request.gen_len", lo=1.0, hi=1e6,
+                    unit="tokens").observe(gen_len)
+        if prefix_hit_frac is not None:
+            m.histogram("request.prefix_hit_frac", lo=1e-3,
+                        hi=1.0).observe(prefix_hit_frac)
+
+    def _trace_dispatch(self, t0_us, totals, depth=None, drafted=0,
+                        accepted=0):
+        """One dispatch's trace events: a duration on the dispatch/spec
+        track plus counter-track samples from the device counter tree."""
+        tr = self.tracer
+        if tr is None:
+            return
+        if depth is None:
+            tr.complete("dispatch", "decode", t0_us,
+                        {"k_steps": self.cfg.k_steps})
+        else:
+            tr.complete("spec", "rounds", t0_us,
+                        {"k_steps": self.cfg.k_steps, "depth": depth,
+                         "drafted": drafted, "accepted": accepted})
+        tr.counter("tokens", {"emitted": totals["tokens"]})
+        if self.cfg.paged:
+            live = (getattr(self, "_ctr_live0", 0)
+                    + totals["blocks_popped"] - totals["blocks_released"])
+            tr.counter("blocks", {"live": live,
+                                  "cow": totals["cow_copies"]})
+
+    def _finalize_serve(self, stats, ctr_host):
+        """End-of-serve telemetry: expose the device counters through
+        ``stats["counters"]`` and fold them plus the allocator / spec
+        gauges into the registry.  ``ctr_host`` is the last counter tree
+        the dispatch sync fetched (None when no dispatch ran — e.g.
+        ``gen_tokens == 1`` on the non-chunked path, where every token
+        comes from prefill; the counters then read zero rather than
+        costing a dedicated sync)."""
+        totals = (counter_totals(ctr_host) if ctr_host is not None
+                  else dict.fromkeys(COUNTER_KEYS, 0))
+        stats["counters"] = totals
+        m = self.metrics
+        if m is None:
+            return
+        for k, v in totals.items():
+            m.counter(f"device.{k}").inc(v)
+        if self.cfg.n_spec:
+            m.gauge("spec.depth").set(stats["spec_depth"])
+            acc = m.gauge("spec.acceptance_rate")   # None -> "n/a"
+            if totals["drafted"]:
+                acc.set(totals["accepted"] / totals["drafted"])
+        if self.cfg.paged:
+            live = (getattr(self, "_ctr_live0", 0)
+                    + totals["blocks_popped"] - totals["blocks_released"])
+            m.gauge("alloc.live_blocks").set(live)
+            m.gauge("alloc.free_blocks").set(self._num_blocks - live)
+        if self.cfg.chunk_size:
+            holds = len(self._hold_blocks)
+            m.gauge("alloc.index_holds").set(holds)
+            m.gauge("alloc.ledger_headroom").set(self._num_blocks - holds)
+            m.counter("prefix.evictions").inc(
+                stats.get("prefix_evictions", 0))
+
     def serve(self, requests, *, gen_tokens: int, seed: int | None = None,
               return_stats: bool = False):
         """Serve ``requests`` (1-D token arrays); each gets ``gen_tokens``
@@ -628,7 +752,8 @@ class Engine:
         B, K = cfg.slots, cfg.k_steps
         requests = [jnp.asarray(r, jnp.int32).reshape(-1) for r in requests]
         stats = {"host_syncs": 0, "dispatches": 0, "prefill_calls": 0,
-                 "decode_steps": 0, "tokens": 0, "prefill_tokens": 0}
+                 "decode_steps": 0, "tokens": 0, "prefill_tokens": 0,
+                 "counters": dict.fromkeys(COUNTER_KEYS, 0)}
         spec_ctl = self._spec_controller() if cfg.n_spec else None
         if cfg.n_spec:
             stats.update(spec_rounds=0, draft_tokens=0, draft_accepted=0,
@@ -639,6 +764,12 @@ class Engine:
             return self._serve_chunked(requests, gen_tokens, seed,
                                        return_stats, stats, spec_ctl)
         outputs: dict[int, list[int]] = {}
+        tr = self.tracer
+        t_enq = time.perf_counter()     # all requests enqueue at serve()
+        req_admit: dict[int, float] = {}
+        ctr_host = None                 # last fetched device counter tree
+        ctr_prev = dict.fromkeys(COUNTER_KEYS, 0)
+        self._ctr_live0 = 0             # fresh cache: no live blocks yet
 
         if cfg.paged:
             cache = model.init_paged_cache(B, cfg.cache_len,
@@ -693,9 +824,15 @@ class Engine:
                     rids = [queue.popleft() for _ in range(take)]
                 if rids:
                     key, sub = jax.random.split(key)
+                    t0_us = tr.now_us() if tr else 0.0
                     cache, state, first, ncalls = self._admit(
                         cache, state, take_slots,
                         [requests[r] for r in rids], gen_tokens, sub)
+                    ta = time.perf_counter()
+                    if tr:
+                        tr.complete("admission", f"admit x{len(rids)}",
+                                    t0_us, {"requests": len(rids),
+                                            "prefill_calls": ncalls})
                     stats["prefill_calls"] += ncalls
                     stats["host_syncs"] += ncalls
                     stats["tokens"] += len(rids)
@@ -704,32 +841,51 @@ class Engine:
                     for s, r, t in zip(take_slots, rids, first):
                         outputs[r] = [t]
                         slot_rid[s], slot_rem[s] = r, gen_tokens - 1
+                        # first token comes from the prefill logits, so
+                        # admission time IS first-token time here
+                        req_admit[r] = ta
                     for s in take_slots:   # gen_tokens == 1 finishes now
                         if slot_rem[s] <= 0:
+                            r = slot_rid[s]
+                            self._request_done(
+                                int(requests[r].shape[0]), gen_tokens,
+                                t_enq, req_admit[r], req_admit[r])
                             slot_rid[s] = -1
                             slot_rsv[s] = 0
             if not any(r >= 0 for r in slot_rid):
                 continue
 
             key, sub = jax.random.split(key)
+            t0_us = tr.now_us() if tr else 0.0
             if cfg.n_spec:
-                state, cache, toks, emitted, counts = self._dispatch_spec(
+                state, cache, toks, emitted = self._dispatch_spec(
                     self.params, self._draft_params, state, cache,
                     jnp.int32(spec_ctl.depth), sub)
-                toks_h, em_h, c = jax.device_get((toks, emitted, counts))
-                stats["draft_tokens"] += int(c[0])
-                stats["draft_accepted"] += int(c[1])
-                stats["spec_rounds"] += K
-                stats["spec_depth"] = spec_ctl.update(int(c[0]), int(c[1]))
             else:
                 state, cache, toks, emitted = self._dispatch(
                     self.params, state, cache, sub)
-                toks_h, em_h = jax.device_get((toks, emitted))
+            # the counter tree rides the returned state: same sync, no cost
+            toks_h, em_h, ctr_host = jax.device_get(
+                (toks, emitted, state["ctr"]))
+            totals = counter_totals(ctr_host)
+            if cfg.n_spec:
+                d_dr = totals["drafted"] - ctr_prev["drafted"]
+                d_ac = totals["accepted"] - ctr_prev["accepted"]
+                stats["draft_tokens"] += d_dr
+                stats["draft_accepted"] += d_ac
+                stats["spec_rounds"] += K
+                depth_used = spec_ctl.depth
+                stats["spec_depth"] = spec_ctl.update(d_dr, d_ac)
+                self._trace_dispatch(t0_us, totals, depth=depth_used,
+                                     drafted=d_dr, accepted=d_ac)
+            else:
+                self._trace_dispatch(t0_us, totals)
+            ctr_prev = totals
             stats["host_syncs"] += 1
             stats["dispatches"] += 1
             stats["decode_steps"] += K
             if cfg.paged and cfg.check_invariants:
-                self._assert_invariants(cache)
+                self._assert_invariants(cache, state)
             for s in range(B):
                 r = slot_rid[s]
                 if r < 0:
@@ -741,7 +897,11 @@ class Engine:
                 if slot_rem[s] <= 0:
                     slot_rid[s] = -1
                     slot_rsv[s] = 0  # device freed the blocks mid-scan
+                    self._request_done(int(requests[r].shape[0]),
+                                       gen_tokens, t_enq, req_admit[r],
+                                       req_admit[r])
 
+        self._finalize_serve(stats, ctr_host)
         outs = [outputs[i] for i in sorted(outputs)]
         return (outs, stats) if return_stats else outs
 
@@ -782,6 +942,19 @@ class Engine:
             l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))
         stats["prefix_hits"] = 0
         stats["prefix_evictions"] = 0
+        # zero the device counters for this serve() (host-side tree
+        # rebuild — covers a reused persistent state).  Index-held blocks
+        # survive across serves, so conservation baselines on them.
+        state = {**state, "ctr": init_counters()}
+        self._ctr_live0 = len(self._hold_blocks)
+        tr = self.tracer
+        t_enq = time.perf_counter()
+        ctr_host = None
+        ctr_prev = dict.fromkeys(COUNTER_KEYS, 0)
+        req_admit: dict[int, float] = {}
+        req_first: dict[int, float] = {}
+        req_pf: dict[int, float] = {}    # prefix-hit fraction per request
+        slot_t0us = [0.0] * B            # admission trace clock per slot
 
         key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
         queue = deque(range(len(requests)))
@@ -796,10 +969,10 @@ class Engine:
         def drop_holds(ids):
             """Release host holds on ``ids`` (eviction / duplicate unwind);
             padded to the pool size so the jitted release compiles once."""
-            nonlocal cache
+            nonlocal cache, state
             arr = np.full((self._num_blocks,), -1, np.int32)
             arr[:len(ids)] = ids
-            cache = self._evict(cache, jnp.asarray(arr))
+            cache, state = self._evict(cache, state, jnp.asarray(arr))
             self._hold_blocks.difference_update(ids)
 
         def try_evict(want: int) -> int:
@@ -807,6 +980,8 @@ class Engine:
             if ids:
                 drop_holds(ids)
                 stats["prefix_evictions"] += len(ids)
+                if tr:
+                    tr.instant("eviction", "evict", {"blocks": len(ids)})
             return len(ids)
 
         while queue or any(r >= 0 for r in slot_rid):
@@ -881,6 +1056,7 @@ class Engine:
                     break
                 s = free.pop(0)
                 queue.popleft()
+                t0_us = tr.now_us() if tr else 0.0
                 shared_arr = np.full((self._mb,), -1, np.int32)
                 shared_arr[:len(shared)] = shared
                 cache, state, new_ids = self._admit_chunk(
@@ -895,6 +1071,13 @@ class Engine:
                 slot_pf[s] = L - pf_start
                 slot_keys[s] = keys
                 outputs[rid] = []
+                req_admit[rid] = time.perf_counter()
+                req_pf[rid] = pf_start / L if L else 0.0
+                if tr:
+                    tr.complete("admission", f"req{rid}", t0_us,
+                                {"prompt_len": L, "prefix_hit": pf_start,
+                                 "shared_blocks": n_shared})
+                    slot_t0us[s] = tr.now_us()
                 stats["prefill_tokens"] += L - pf_start
                 stats["prefix_hits"] += pf_start   # tokens NOT recomputed
                 stats["prefill_calls"] += 1
@@ -905,30 +1088,42 @@ class Engine:
                     self._hold_blocks.update(ids)
                     slot_pend[s] = (toks_np, matched_full, ids)
                 if cfg.check_invariants:
-                    self._assert_invariants(cache)
+                    self._assert_invariants(cache, state)
             if not any(r >= 0 for r in slot_rid):
                 assert not queue, "admission stalled with an idle pool"
                 continue
 
             key, sub = jax.random.split(key)
             prefilling = any(p > 0 for p in slot_pf)
+            t0_us = tr.now_us() if tr else 0.0
             if cfg.n_spec:
                 dispatch = (self._dispatch_spec_chunk if prefilling
                             else self._dispatch_spec)
-                state, cache, toks, emitted, counts = dispatch(
+                state, cache, toks, emitted = dispatch(
                     self.params, self._draft_params, state, cache,
                     jnp.int32(spec_ctl.depth), sub)
-                toks_h, em_h, c = jax.device_get((toks, emitted, counts))
-                stats["draft_tokens"] += int(c[0])
-                stats["draft_accepted"] += int(c[1])
-                stats["spec_rounds"] += K
-                stats["spec_depth"] = spec_ctl.update(int(c[0]), int(c[1]))
             else:
                 dispatch = (self._dispatch_chunk if prefilling
                             else self._dispatch)
                 state, cache, toks, emitted = dispatch(
                     self.params, state, cache, sub)
-                toks_h, em_h = jax.device_get((toks, emitted))
+            # the counter tree rides the returned state: same sync, no cost
+            toks_h, em_h, ctr_host = jax.device_get(
+                (toks, emitted, state["ctr"]))
+            totals = counter_totals(ctr_host)
+            if cfg.n_spec:
+                d_dr = totals["drafted"] - ctr_prev["drafted"]
+                d_ac = totals["accepted"] - ctr_prev["accepted"]
+                stats["draft_tokens"] += d_dr
+                stats["draft_accepted"] += d_ac
+                stats["spec_rounds"] += K
+                depth_used = spec_ctl.depth
+                stats["spec_depth"] = spec_ctl.update(d_dr, d_ac)
+                self._trace_dispatch(t0_us, totals, depth=depth_used,
+                                     drafted=d_dr, accepted=d_ac)
+            else:
+                self._trace_dispatch(t0_us, totals)
+            ctr_prev = totals
             stats["host_syncs"] += 1
             stats["dispatches"] += 1
             stats["decode_steps"] += K
@@ -936,7 +1131,12 @@ class Engine:
                 if slot_rid[s] < 0 or slot_pf[s] <= 0:
                     continue
                 slot_pf[s] = max(0, slot_pf[s] - K * C)
-                if slot_pf[s] == 0 and slot_pend[s] is not None:
+                if slot_pf[s] > 0:
+                    continue
+                if tr:
+                    tr.complete("prefill-chunk", f"req{slot_rid[s]}",
+                                slot_t0us[s])
+                if slot_pend[s] is not None:
                     # the slot's new full prompt blocks now hold real KV:
                     # publish them to the prefix index (duplicates lose
                     # their pre-retained hold and die with the slot)
@@ -955,12 +1155,14 @@ class Engine:
                     self._index.pin(reg_keys)
                     slot_keys[s] = slot_keys[s] + reg_keys
             if cfg.check_invariants:
-                self._assert_invariants(cache)
+                self._assert_invariants(cache, state)
             for s in range(B):
                 r = slot_rid[s]
                 if r < 0:
                     continue
                 row = [int(t) for t in toks_h[s][em_h[s]]]
+                if row and r not in req_first:
+                    req_first[r] = time.perf_counter()
                 outputs[r].extend(row)
                 stats["tokens"] += len(row)
                 slot_rem[s] -= len(row)
@@ -971,7 +1173,12 @@ class Engine:
                     slot_rsv[s] = 0
                     self._index.unpin(slot_keys[s])
                     slot_keys[s] = []
+                    self._request_done(
+                        int(requests[r].shape[0]), gen_tokens, t_enq,
+                        req_admit[r], req_first.get(r, req_admit[r]),
+                        prefix_hit_frac=req_pf.get(r))
 
+        self._finalize_serve(stats, ctr_host)
         if persist:
             self._pcache, self._pstate = cache, state
         outs = [outputs[i] for i in sorted(outputs)]

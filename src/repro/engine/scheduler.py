@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from repro.engine.paged import BSTATE_KEYS, release_slots
 from repro.engine.sampler import SamplingParams, sample
 from repro.models.lm import Model
+from repro.telemetry.counters import bump, init_counters
 
 
 def init_slot_state(n_slots: int, prompt_cap: int = 0) -> dict:
@@ -43,11 +44,14 @@ def init_slot_state(n_slots: int, prompt_cap: int = 0) -> dict:
 
     ``prompt_cap > 0`` adds the chunked-prefill fields: a per-slot prompt
     buffer plus prefill cursor/length and the post-first-token decode
-    budget (armed by the engine's admission)."""
+    budget (armed by the engine's admission).  ``ctr`` is the
+    device-resident telemetry counter tree (repro.telemetry.counters):
+    bumped inside the scan, read for free at the existing dispatch sync."""
     st = {
         "cur": jnp.zeros((n_slots, 1), jnp.int32),      # last sampled token
         "active": jnp.zeros((n_slots,), bool),          # slot serving a req?
         "remaining": jnp.zeros((n_slots,), jnp.int32),  # decode budget left
+        "ctr": init_counters(),                         # device counters
     }
     if prompt_cap:
         st["prompt"] = jnp.zeros((n_slots, prompt_cap), jnp.int32)
@@ -113,14 +117,21 @@ def chunk_prefill_substep(model: Model, sp: SamplingParams, chunk: int,
     first = sample(logits_pf, first_key, sp)
     go = completed & (st["budget"] > 0)
     cache = {**cache, "slot_active": cache["slot_active"] | go}
+    nf0 = cache["n_free"]
     bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
                            completed & ~go)
     cache = {**cache, **bstate}
+    ctr = bump(st["ctr"],
+               tokens=jnp.sum(completed),   # first tokens emit via the grid
+               chunk_pieces=jnp.sum(prefilling),
+               chunks_completed=jnp.sum(completed),
+               blocks_released=cache["n_free"] - nf0)
     st = {**st,
           "cur": jnp.where(completed[:, None], first[:, None], st["cur"]),
           "active": st["active"] | go,
           "remaining": jnp.where(completed, st["budget"], st["remaining"]),
-          "pf_pos": st["pf_pos"] + valid}
+          "pf_pos": st["pf_pos"] + valid,
+          "ctr": ctr}
     return st, cache, first, completed
 
 
@@ -140,8 +151,9 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
     ``draft_params`` argument after ``params`` and a runtime ``depth``
     scalar before ``key`` (the dynamic speculation depth, 1..n_spec — a
     plain traced operand, so moving it never recompiles), and its grids
-    widen to ``[B, k_steps * (n_spec + 1)]``, plus a trailing ``(drafted,
-    accepted)`` counter pair.  Speculation requires the paged cache and
+    widen to ``[B, k_steps * (n_spec + 1)]`` (acceptance telemetry rides
+    the ``state["ctr"]`` counter tree).  Speculation requires the paged
+    cache and
     **composes** with both flags: ``cow=True`` makes the round's span
     allocation copy-on-write (a draft/verify write into a prefix-shared
     block pops a private copy first, exactly like a decode write), and
@@ -181,7 +193,10 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
     def dispatch(params, state: dict, cache: dict, key):
         def body(carry, step_key):
             st, cache = carry
+            ctr = st["ctr"]
             # ---- decode sub-step (slots in decode phase) ----------------
+            if paged:   # allocator deltas around the step count pops/CoW
+                nf0, ref0 = cache["n_free"], cache["ref"]
             logits, new_cache = step_fn(params, st["cur"], cache)
             if chunk:  # prefilling/idle slots' rows must stay untouched
                 new_cache = _keep_rows(new_cache, cache, st["active"])
@@ -191,12 +206,19 @@ def make_decode_dispatch(model: Model, sp: SamplingParams, k_steps: int,
             remaining = st["remaining"] - emitted.astype(jnp.int32)
             active = emitted & (remaining > 0)
             if paged:
+                # alloc_step only pops; a CoW pop is the only ref decrement
+                ctr = bump(ctr,
+                           blocks_popped=nf0 - cache["n_free"],
+                           cow_copies=jnp.sum(cache["ref"] < ref0))
+                nf1 = cache["n_free"]
                 bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
                                        emitted & ~active)
                 cache = {**cache, **bstate}
+                ctr = bump(ctr, blocks_released=cache["n_free"] - nf1)
             tok_out, em_out = nxt, emitted
             st = {**st, "cur": nxt[:, None], "active": active,
-                  "remaining": remaining}
+                  "remaining": remaining,
+                  "ctr": bump(ctr, tokens=jnp.sum(emitted))}
             # ---- chunked-prefill sub-step -------------------------------
             if chunk:
                 st, cache, first, completed = chunk_prefill_substep(

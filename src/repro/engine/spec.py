@@ -78,11 +78,12 @@ program: the draft still runs ``n_spec`` steps and the grids stay sized
 ``n_spec + 1``, so moving ``depth`` between dispatches never changes the
 jitted signature (zero recompiles — pinned by the staticcheck fingerprint
 manifest and tests), while the acceptance rules mask positions beyond it.
-:class:`DepthController` is the host-side policy: it reads the
-``(drafted, accepted)`` telemetry each dispatch returns and walks the depth
-up on sustained high acceptance, halving it on misses — AIMD on the
-acceptance rate — so a garbage draft stops wasting n_spec draft forwards
-per round without a single retrace.
+:class:`DepthController` is the host-side policy: it reads the per-dispatch
+``drafted`` / ``accepted`` deltas of the device counter tree
+(``state["ctr"]``, repro.telemetry.counters — fetched in the same sync as
+the token grid) and walks the depth up on sustained high acceptance,
+halving it on misses — AIMD on the acceptance rate — so a garbage draft
+stops wasting n_spec draft forwards per round without a single retrace.
 
 Guarantee: greedy speculative output is **token-exact** against the
 non-speculative paged engine (and therefore the contiguous engine and the
@@ -108,6 +109,7 @@ from repro.engine.paged import BSTATE_KEYS, alloc_span, release_slots
 from repro.engine.sampler import SamplingParams, probs, sample
 from repro.engine.scheduler import chunk_prefill_substep
 from repro.models.lm import Model, cow_copy_blocks
+from repro.telemetry.counters import bump
 
 
 # ---------------------------------------------------------------------------
@@ -198,8 +200,8 @@ def rejection_accept(key, drafts: jnp.ndarray, q_logits: jnp.ndarray,
 class DepthController:
     """AIMD controller for the speculative draft depth.
 
-    The engine feeds it the ``(drafted, accepted)`` counter pair each
-    dispatch returns; :meth:`update` moves ``depth`` between 1 and
+    The engine feeds it the per-dispatch ``(drafted, accepted)`` deltas of
+    the device counter tree; :meth:`update` moves ``depth`` between 1 and
     ``n_max``: additive-increase after ``patience`` consecutive dispatches
     at acceptance rate >= ``hi`` (the draft is earning its forwards —
     speculate deeper), multiplicative-decrease (halve) the moment the rate
@@ -254,15 +256,17 @@ def make_spec_dispatch(model: Model, sp: SamplingParams, k_steps: int,
     """Build the jitted K-round speculative dispatch.
 
     ``dispatch(params, draft_params, state, cache, depth, key)`` ->
-    ``(state, cache, tokens [B, K*(n_spec+1)], emitted [B, K*(n_spec+1)],
-    counts [2])`` — ``emitted[b]`` marks the tokens slot ``b`` really
-    produced (a contiguous prefix per round, rounds concatenated in order,
-    so the host appends ``tokens[b, emitted[b]]`` verbatim, exactly like
-    the plain dispatch's grid).  ``counts`` is ``(drafted, accepted)``
-    summed over rounds and slots — the acceptance-rate telemetry the
-    :class:`DepthController` consumes.  ``depth`` is the dynamic
-    speculation depth (a traced ``int32``; pass ``jnp.int32(d)``, a weak
-    Python literal would retrace per value).
+    ``(state, cache, tokens [B, K*(n_spec+1)], emitted [B, K*(n_spec+1)])``
+    — ``emitted[b]`` marks the tokens slot ``b`` really produced (a
+    contiguous prefix per round, rounds concatenated in order, so the host
+    appends ``tokens[b, emitted[b]]`` verbatim, exactly like the plain
+    dispatch's grid).  The round bumps the device counter tree
+    (``state["ctr"]`` — drafted/accepted/rejected, CoW copies, blocked
+    retries, block pops/releases), which the host reads in the same sync;
+    its per-dispatch drafted/accepted deltas are the acceptance-rate
+    telemetry the :class:`DepthController` consumes.  ``depth`` is the
+    dynamic speculation depth (a traced ``int32``; pass ``jnp.int32(d)``,
+    a weak Python literal would retrace per value).
 
     ``cow=True`` composes with refcounted prefix caching: the round's span
     allocation copies-on-write a shared first block (see module
@@ -292,9 +296,11 @@ def make_spec_dispatch(model: Model, sp: SamplingParams, k_steps: int,
 
         def round_body(carry, step_key):
             st, cache = carry
+            ctr = st["ctr"]
             active = st["active"]
             lengths = cache["lengths"]
             blocked = jnp.zeros((B,), bool)
+            nf_r0 = cache["n_free"]      # pops this round, by free-list delta
             # ---- 1. span allocation + CoW (once per round) --------------
             leaf = next((l for l in cache["stack"].values() if "pk" in l),
                         None)
@@ -309,6 +315,7 @@ def make_spec_dispatch(model: Model, sp: SamplingParams, k_steps: int,
                 if cow:
                     cache = cow_copy_blocks(cache, cow_src, cow_dst,
                                             jnp.any(cow_src != cow_dst))
+                    ctr = bump(ctr, cow_copies=jnp.sum(cow_src != cow_dst))
             # a slot whose shared block could not be CoWed sits the round
             # out entirely (no draft writes, no verify, no emission) and
             # retries next round — unreachable under the reservation
@@ -365,13 +372,22 @@ def make_spec_dispatch(model: Model, sp: SamplingParams, k_steps: int,
             remaining = st["remaining"] - m
             new_active = active & (remaining > 0)
             # ---- 7. recycle drained slots' blocks in-scan ---------------
+            nf1 = cache["n_free"]
             bstate = release_slots({k: cache[k] for k in BSTATE_KEYS},
                                    active & ~new_active)
             cache = {**cache, **bstate}
-            st = {**st, "cur": cur, "active": new_active,
-                  "remaining": remaining}
             drafted = jnp.sum(jnp.where(active_r, depth, 0))
             accepted = jnp.sum(jnp.where(active_r, a, 0))
+            ctr = bump(ctr,
+                       tokens=jnp.sum(m),
+                       drafted=drafted,
+                       accepted=accepted,
+                       rejected=drafted - accepted,
+                       blocked_retries=jnp.sum(blocked),
+                       blocks_popped=nf_r0 - nf1,
+                       blocks_released=cache["n_free"] - nf1)
+            st = {**st, "cur": cur, "active": new_active,
+                  "remaining": remaining, "ctr": ctr}
             out_grid = out
             # ---- 8. chunked-prefill phase -------------------------------
             if chunk:
@@ -385,13 +401,13 @@ def make_spec_dispatch(model: Model, sp: SamplingParams, k_steps: int,
                 hit = completed[:, None] & col0
                 out_grid = jnp.where(hit, first[:, None], out)
                 em = em | hit
-            return (st, cache), (out_grid, em, drafted, accepted)
+            return (st, cache), (out_grid, em)
 
         keys = jax.random.split(key, k_steps)
-        (state, cache), (toks, em, dr, ac) = jax.lax.scan(
+        (state, cache), (toks, em) = jax.lax.scan(
             round_body, (state, cache), keys)
         toks = toks.transpose(1, 0, 2).reshape(B, k_steps * S1)
         em = em.transpose(1, 0, 2).reshape(B, k_steps * S1)
-        return state, cache, toks, em, jnp.stack([jnp.sum(dr), jnp.sum(ac)])
+        return state, cache, toks, em
 
     return dispatch

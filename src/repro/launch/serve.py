@@ -37,7 +37,14 @@ Usage (CPU-scale):
       --requests 6 --batch 2 --prompt-len 16 --gen 8 --k-steps 8 \
       [--daq [--method daq] [--base-ckpt experiments/study/base]] \
       [--paged --spec-draft daq --n-spec 4] \
-      [--temperature 0.8 --top-k 40 --top-p 0.95] [--mesh 1]
+      [--temperature 0.8 --top-k 40 --top-p 0.95] [--mesh 1] \
+      [--metrics-out metrics.json --trace-out trace.json]
+
+``--metrics-out`` writes the request-lifecycle metrics snapshot
+(``repro.telemetry.metrics/v1`` JSON — TTFT/TPOT/queue-wait percentiles,
+acceptance rate, prefix-hit fraction, allocator gauges) and ``--trace-out``
+a Chrome/Perfetto trace of the run; the CLI summary is printed from the
+same snapshot either way.
 """
 from __future__ import annotations
 
@@ -162,6 +169,16 @@ def main() -> None:
     ap.add_argument("--base-ckpt", default="",
                     help="checkpoint dir of the BASE model for delta-aware "
                          "quantization (loaded via repro.checkpoint)")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the request-lifecycle metrics snapshot "
+                         "(repro.telemetry.metrics/v1 JSON: TTFT/TPOT "
+                         "percentiles, acceptance rate, prefix-hit "
+                         "fraction, allocator gauges) to PATH")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "serve run (admission / dispatch / spec / "
+                         "prefill-chunk / eviction tracks) to PATH — open "
+                         "in https://ui.perfetto.dev or chrome://tracing")
     args = ap.parse_args()
     if not args.daq and not args.spec_draft \
             and (args.base_ckpt or args.method is not None
@@ -231,6 +248,9 @@ def main() -> None:
                             top_k=args.top_k, top_p=args.top_p)
     if (args.chunk_size or args.prefix_cache) and not args.paged:
         raise SystemExit("--chunk-size/--prefix-cache require --paged")
+    from repro.telemetry import MetricsRegistry, Tracer
+    reg = MetricsRegistry()
+    tracer = Tracer() if args.trace_out else None
     eng = Engine(model, params, slots=args.batch, cache_len=cache_len,
                  k_steps=args.k_steps, sampling=sp, mesh=mesh,
                  paged=args.paged, block_size=args.block_size,
@@ -238,7 +258,7 @@ def main() -> None:
                  prefix_cache=args.prefix_cache,
                  n_spec=args.n_spec if args.spec_draft else 0,
                  spec_dynamic=not args.spec_static,
-                 draft_params=draft_params)
+                 draft_params=draft_params, metrics=reg, tracer=tracer)
 
     t0 = time.time()
     outs, stats = eng.serve(prompts, gen_tokens=args.gen, return_stats=True)
@@ -254,19 +274,31 @@ def main() -> None:
         extra = (f", {stats['prefill_tokens']} prompt tokens prefilled"
                  + (f" ({stats.get('prefix_hits', 0)} prefix-hit)"
                     if args.prefix_cache else ""))
-    if args.spec_draft:
-        acc = (stats["draft_accepted"] / stats["draft_tokens"]
-               if stats["draft_tokens"] else 0.0)
-        extra += (f", draft acceptance {acc:.1%} "
-                  f"({stats['draft_accepted']}/{stats['draft_tokens']} over "
-                  f"{stats['spec_rounds']} rounds of <={args.n_spec}, "
-                  f"final depth {stats['spec_depth']})")
+    snap = reg.snapshot()
+    # acceptance / depth come from the metrics snapshot (the device
+    # counter tree feeds the spec.* gauges); non-spec runs report n/a
+    acc = snap["gauges"].get("spec.acceptance_rate")
+    depth = snap["gauges"].get("spec.depth")
+    extra += (", acceptance: n/a" if acc is None else
+              f", draft acceptance {acc:.1%} over "
+              f"{stats.get('spec_rounds', 0)} rounds of <={args.n_spec}, "
+              f"final depth {depth:.0f}")
     print(f"served {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s, "
           f"{stats['host_syncs']/max(n_tok, 1):.3f} host syncs/token; "
           f"{stats['dispatches']} dispatches of {args.k_steps} steps, "
           f"{stats['prefill_calls']} prefill calls; {kind} cache, "
           f"{stats['cache_bytes']} cache bytes{extra})")
+    print("metrics:")
+    print(reg.summary())
+    if args.metrics_out:
+        reg.save(args.metrics_out)
+        print(f"[serve] metrics snapshot ({snap['schema']}) -> "
+              f"{args.metrics_out}")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"[serve] perfetto trace ({len(tracer.events)} events) -> "
+              f"{args.trace_out}")
     # jit cache size per entry point: dispatch/scatter entries hold at 1 in
     # steady state; the prefill entries compile once per distinct prompt-
     # length bucket.  Anything above that is an avoidable recompile — the

@@ -190,7 +190,8 @@ def entry_args(eng, case: Case, name: str) -> tuple:
         return (cache, state, i32(0), toks, i32(L), shared, i32(0),
                 i32(1), i32(0), i32(0), i32(0), i32(1))
     if name == "_evict":
-        return (cache, jnp.full((eng._num_blocks,), -1, jnp.int32))
+        return (cache, state,
+                jnp.full((eng._num_blocks,), -1, jnp.int32))
 
     # admission entries: the part cache comes from an abstract prefill so
     # no real forward runs during checking

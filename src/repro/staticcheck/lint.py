@@ -39,6 +39,7 @@ TRACED_FILES = (
     "engine/paged.py",
     "engine/sampler.py",
     "quant_runtime/qlinear.py",
+    "telemetry/counters.py",
 )
 TRACED_DIRS = ("models/",)
 MIXED_FILES = ("engine/engine.py",)

@@ -1,0 +1,41 @@
+"""Observability for the serving engine — three layers, all free on the
+hot path:
+
+* **Device-resident counters** (:mod:`repro.telemetry.counters`): a small
+  int32 pytree (``state["ctr"]``) threaded through the dispatch scan carry
+  by ``engine/scheduler.py`` / ``engine/spec.py`` and bumped where the
+  events happen (token emission, block pops/releases, CoW copies, prefix
+  hits, chunk pieces, blocked speculative slots).  The counters ride the
+  donated state tree, so they are read *for free* at the once-per-K host
+  sync the engine already pays — zero new host syncs, zero recompiles
+  (pinned by the staticcheck fingerprint manifest and a compile-count
+  test).
+* **Request-lifecycle metrics** (:mod:`repro.telemetry.metrics`): a
+  host-side :class:`MetricsRegistry` of counters, gauges and log-bucketed
+  histograms — per-request TTFT / TPOT / queue-wait / lengths, acceptance
+  rate, prefix-hit fraction, allocator gauges — snapshotted to a stable
+  JSON schema (``repro.telemetry.metrics/v1``) and summarized
+  (p50/p95/p99) by the serve CLI.
+* **Trace export** (:mod:`repro.telemetry.trace`): a :class:`Tracer`
+  emitting Chrome/Perfetto trace-event JSON — one track per subsystem
+  (admission, dispatch, speculative rounds with depth annotations,
+  prefill chunks, eviction) plus counter tracks sampled from the device
+  counters.  Open the file in Perfetto (https://ui.perfetto.dev) or
+  ``chrome://tracing``.
+
+Enable the host-side layers with ``Engine(..., metrics=MetricsRegistry(),
+tracer=Tracer())`` or ``python -m repro.launch.serve --metrics-out PATH
+--trace-out PATH``; the device counters are always on (a handful of
+scalar adds inside the scan) and surface as ``stats["counters"]``.
+"""
+from repro.telemetry.counters import (COUNTER_KEYS, bump, counter_totals,
+                                      init_counters)
+from repro.telemetry.metrics import (Counter, Gauge, Histogram,
+                                     MetricsRegistry, METRICS_SCHEMA)
+from repro.telemetry.trace import TRACE_PID, Tracer
+
+__all__ = [
+    "COUNTER_KEYS", "init_counters", "bump", "counter_totals",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "METRICS_SCHEMA",
+    "Tracer", "TRACE_PID",
+]

@@ -340,5 +340,20 @@ def test_prefix_stress_randomized(seed):
                  k_steps=k_steps, paged=True, block_size=8,
                  num_blocks=num_blocks, prefix_cache=True, chunk_size=chunk,
                  check_invariants=True)
-    assert eng.serve(prompts, gen_tokens=gen) == contig
-    assert eng.serve(prompts, gen_tokens=gen) == contig   # warm pass
+    outs, stats = eng.serve(prompts, gen_tokens=gen, return_stats=True)
+    assert outs == contig
+    # device-counter conservation: after the drain the only blocks out of
+    # the pool are the prefix index's holds ("popped == released + live")
+    c = stats["counters"]
+    assert (c["blocks_popped"] - c["blocks_released"]
+            == len(eng._hold_blocks))
+    assert c["prefix_hit_tokens"] == stats["prefix_hits"]
+    assert c["tokens"] == stats["tokens"]
+    held0 = len(eng._hold_blocks)
+    outs, stats = eng.serve(prompts, gen_tokens=gen, return_stats=True)
+    assert outs == contig                                 # warm pass
+    c = stats["counters"]
+    # warm counters re-zero and re-baseline on the blocks held at start
+    assert (held0 + c["blocks_popped"] - c["blocks_released"]
+            == len(eng._hold_blocks))
+    assert c["prefix_hit_tokens"] == stats["prefix_hits"]

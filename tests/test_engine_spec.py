@@ -282,11 +282,18 @@ def test_spec_stress_randomized(seed):
     full = slots * blocks_for(cache_len, 8)
     lo = max(blocks_for(L + gen - 1 + n_spec, 8) for L in lens)
     num_blocks = int(rng.randint(lo, full + 1))    # sometimes starved pool
-    outs = Engine(model, params, slots=slots, cache_len=cache_len,
-                  k_steps=k_steps, paged=True, block_size=8,
-                  num_blocks=num_blocks, n_spec=n_spec, draft_params=dtree,
-                  check_invariants=True).serve(prompts, gen_tokens=gen)
+    outs, stats = Engine(model, params, slots=slots, cache_len=cache_len,
+                         k_steps=k_steps, paged=True, block_size=8,
+                         num_blocks=num_blocks, n_spec=n_spec,
+                         draft_params=dtree, check_invariants=True
+                         ).serve(prompts, gen_tokens=gen, return_stats=True)
     assert outs == base
+    # device-counter conservation over the whole randomized run
+    c = stats["counters"]
+    assert c["drafted"] == c["accepted"] + c["rejected"]
+    assert c["blocks_popped"] == c["blocks_released"]  # fully drained
+    assert c["drafted"] == stats["draft_tokens"]
+    assert c["accepted"] == stats["draft_accepted"]
 
 
 @settings(max_examples=3, deadline=None)
@@ -322,12 +329,20 @@ def test_spec_composed_stress_randomized(seed):
     lo = max(min(blocks_for(L + gen - 1 + n_spec, 8), mb)
              for L in lens) + 1                    # + the CoW spare
     num_blocks = int(rng.randint(lo, slots * mb + 1))
-    outs = Engine(model, params, slots=slots, cache_len=cache_len,
-                  k_steps=k_steps, paged=True, block_size=8,
-                  chunk_size=chunk, prefix_cache=True,
-                  num_blocks=num_blocks, n_spec=n_spec, draft_params=dtree,
-                  check_invariants=True).serve(prompts, gen_tokens=gen)
+    eng = Engine(model, params, slots=slots, cache_len=cache_len,
+                 k_steps=k_steps, paged=True, block_size=8,
+                 chunk_size=chunk, prefix_cache=True,
+                 num_blocks=num_blocks, n_spec=n_spec, draft_params=dtree,
+                 check_invariants=True)
+    outs, stats = eng.serve(prompts, gen_tokens=gen, return_stats=True)
     assert outs == base
+    # device-counter conservation: drafts balance, and after the drain the
+    # only blocks still out of the pool are the prefix index's holds
+    c = stats["counters"]
+    assert c["drafted"] == c["accepted"] + c["rejected"]
+    assert (c["blocks_popped"] - c["blocks_released"]
+            == len(eng._hold_blocks))
+    assert c["prefix_hit_tokens"] == stats["prefix_hits"]
 
 
 # ---------------------------------------------------------------------------
